@@ -1,0 +1,38 @@
+"""Re-run the loop-aware HLO analysis over stored .hlo.txt.gz artifacts
+(no recompilation) and refresh the dryrun JSON records in place."""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+
+from repro.launch import hlo_analysis  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def main():
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        rec = json.load(open(f))
+        gz = f.replace(".json", ".hlo.txt.gz")
+        if rec.get("skipped") or not rec.get("ok") or not os.path.exists(gz):
+            continue
+        with gzip.open(gz, "rt") as fh:
+            hlo = fh.read()
+        la = hlo_analysis.analyze(hlo)
+        rec.update(flops_loop_aware=la["flops"],
+                   hbm_bytes_loop_aware=la["hbm_bytes"],
+                   collective_bytes_loop_aware=la["collective_bytes"],
+                   collectives_by_op=la["collectives"])
+        json.dump(rec, open(f, "w"), indent=1)
+        print(f"{rec['arch']:<17}{rec['shape']:<13}{rec['mesh']:<7}"
+              f"flops={la['flops']:.2e} hbm={la['hbm_bytes']:.2e} "
+              f"coll={la['collective_bytes']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

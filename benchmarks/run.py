@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,...,derived`` CSV per benchmark (see each module docstring).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller batch set / shorter workloads")
+    ap.add_argument("--skip-serving", action="store_true")
+    args = ap.parse_args()
+
+    from . import (analytic_model, chain_selection, roofline,
+                   serving_metrics, table2_speedup)
+
+    t0 = time.time()
+    print("# analytic_model (paper Eq. 2/3/4)")
+    analytic_model.main()
+
+    print("# roofline (deliverable g - from dry-run artifacts)")
+    for mesh in ("single", "multi"):
+        try:
+            roofline.main(mesh=mesh)
+        except Exception as e:  # noqa: BLE001
+            print(f"roofline,{mesh},unavailable,{e}")
+
+    print("# chain_selection (paper Fig. 2)")
+    chain_selection.main()
+
+    print("# table2_speedup (paper Table 2)")
+    batches = (1, 4, 8) if args.quick else (1, 4, 8, 16, 32, 64)
+    table2_speedup.main(batches=batches,
+                        max_new=12 if args.quick else 24)
+
+    if not args.skip_serving:
+        print("# serving_metrics (paper SS5 metrics)")
+        serving_metrics.main(
+            datasets=("gsm8k",) if args.quick
+            else ("gsm8k", "humaneval", "mtbench", "mgsm"),
+            duration=6.0 if args.quick else 12.0)
+
+    print(f"# total bench time: {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Table 2 reproduction: speed ratio relative to the autoregressive
+baseline (TMO) vs batch size, for
+  - Second-level SD   (static [draft, target]),
+  - Third-level SD    (static [draft, mid, target]),
+  - Third-level Ours  (SpecRouter adaptive).
+
+Real wall-clock on the CPU-trained demo pool (same capability ordering as
+the paper's Llama pool).  Output: CSV rows batch,method,ratio.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ChainRouter
+from repro.train.pool import build_trained_pool
+
+BATCHES = (1, 4, 8, 16, 32, 64)
+METHODS = {
+    "TMO": dict(adaptive=False, fixed_chain=("demo-7b",), fixed_window=1),
+    "second-level-sd": dict(adaptive=False,
+                            fixed_chain=("demo-68m", "demo-7b"),
+                            fixed_window=4),
+    "third-level-sd": dict(adaptive=False,
+                           fixed_chain=("demo-68m", "demo-1b", "demo-7b"),
+                           fixed_window=4),
+    "third-level-ours": dict(adaptive=True),
+}
+
+
+def tpot_for(pool, corpus, batch: int, router_kwargs, max_new: int = 24,
+             seed: int = 5) -> float:
+    """Steady-state TPOT: one warmup generation populates the jit caches
+    (the paper measures decode speed, not compile time), then the timed
+    run reuses the same router/executor."""
+    prompts, lens = corpus.prompts(batch, 10, 24, seed=seed)
+    router = ChainRouter(pool, "demo-7b", greedy=True, **router_kwargs)
+    router.generate(prompts, lens, min(6, max_new), request_id=f"w{batch}")
+    out = router.generate(prompts, lens, max_new, request_id=f"b{batch}")
+    wall = sum(out.cycle_wall_s)
+    return wall / max(out.committed_tokens, 1)
+
+
+def main(batches=BATCHES, max_new: int = 24, repeats: int = 1,
+         print_csv: bool = True) -> List[Dict]:
+    pool, corpus = build_trained_pool(verbose=False)
+    rows = []
+    for B in batches:
+        tpots = {}
+        for name, kw in METHODS.items():
+            vals = [tpot_for(pool, corpus, B, kw, max_new, seed=5 + r)
+                    for r in range(repeats)]
+            tpots[name] = float(np.mean(vals))
+        for name in METHODS:
+            if name == "TMO":
+                continue
+            ratio = tpots["TMO"] / tpots[name]
+            rows.append(dict(batch=B, method=name, ratio=ratio,
+                             tpot_s=tpots[name], tmo_tpot_s=tpots["TMO"]))
+            if print_csv:
+                print(f"table2,{B},{name},{ratio:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Pytree checkpointing without orbax: npz arrays + json treedef.
+
+Layout:  <dir>/<name>.npz  (flat arrays, keys = flattened paths)
+         <dir>/<name>.json (structure + dtypes + metadata)
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz has no bf16: store as f32
+            arr = arr.astype(np.float32)   # (lossless: bf16 ⊂ f32)
+        out[key] = arr
+    return out
+
+
+def save(path: str, tree: Any, metadata: Optional[Dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrs = _flatten(tree)
+    np.savez(path + ".npz", **arrs)
+    spec = jax.tree.map(lambda x: [list(np.shape(x)),
+                                   str(np.asarray(x).dtype)], tree)
+    with open(path + ".json", "w") as f:
+        json.dump({"spec": jax.tree.map(lambda s: s, spec),
+                   "metadata": metadata or {}}, f, default=str)
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a matching pytree)."""
+    data = np.load(path + ".npz")
+    arrs = _flatten(like)
+    keys = list(arrs.keys())
+    assert set(keys) == set(data.files), (
+        f"checkpoint mismatch: {set(keys) ^ set(data.files)}")
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    flat_keys, _ = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    import jax.numpy as jnp
+    for (path_k, leaf) in flat_keys:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(np.shape(leaf)), (
+            f"checkpoint shape mismatch at {key}: "
+            f"{arr.shape} vs {np.shape(leaf)}")
+        want = np.asarray(leaf).dtype
+        if want.name == "bfloat16":
+            out.append(jnp.asarray(arr, dtype=jnp.bfloat16))
+        else:
+            out.append(np.asarray(arr, dtype=want))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path + ".npz") and os.path.exists(path + ".json")

@@ -1,0 +1,65 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers,
+smoke tests, and the dry-run matrix."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ..models.config import INPUT_SHAPES, InputShape, ModelConfig
+from . import (gemma3_27b, granite_20b, hymba_1p5b, kimi_k2_1t_a32b,
+               llama_pool, minitron_8b, olmoe_1b_7b, qwen1p5_4b, qwen2_vl_2b,
+               whisper_tiny, xlstm_1p3b)
+
+_MODULES = {
+    "gemma3-27b": gemma3_27b,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
+    "xlstm-1.3b": xlstm_1p3b,
+    "hymba-1.5b": hymba_1p5b,
+    "qwen1.5-4b": qwen1p5_4b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "whisper-tiny": whisper_tiny,
+    "minitron-8b": minitron_8b,
+    "granite-20b": granite_20b,
+    "qwen2-vl-2b": qwen2_vl_2b,
+    "llama-pool": llama_pool,
+}
+
+ASSIGNED_ARCHS: List[str] = [k for k in _MODULES if k != "llama-pool"]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].config()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].smoke_config()
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """DESIGN §5 skips: long_500k only for sub-quadratic-capable archs;
+    decode shapes run on every decoder-bearing arch (all 10)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context()
+    return True
+
+
+def effective_shape(cfg: ModelConfig, shape: InputShape):
+    """(seq_len, batch, clipped): whisper's learned position table bounds
+    its sequence length at 448 — 32k shapes run CLIPPED to the arch's
+    architectural maximum (recorded in EXPERIMENTS.md §Dry-run)."""
+    if cfg.learned_positions and shape.seq_len > cfg.max_position:
+        return cfg.max_position, shape.global_batch, True
+    return shape.seq_len, shape.global_batch, False
+
+
+def dryrun_matrix():
+    """All (arch, shape) baseline combos, with applicability filtering."""
+    out = []
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        for s in INPUT_SHAPES.values():
+            out.append((a, s.name, shape_applicable(cfg, s)))
+    return out

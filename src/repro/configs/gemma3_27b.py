@@ -1,0 +1,32 @@
+"""gemma3-27b [dense] — 5:1 local:global sliding-window attention, 128k
+context [hf:google/gemma-3-1b-pt scaled per assignment]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+ARCH_ID = "gemma3-27b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        num_layers=62, d_model=5376, num_heads=32, num_kv_heads=16,
+        head_dim=168, d_ff=21504, vocab_size=262144,
+        sliding_window=1024, local_global_ratio=5,
+        rope_theta=10_000.0, rope_theta_global=1_000_000.0,
+        qk_norm=True, sandwich_norm=True, embed_scale=True,
+        logit_softcap=30.0, attn_softcap=50.0,
+        max_position=131072, dtype=jnp.bfloat16,
+        source="[hf:google/gemma-3-1b-pt]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=257,
+        sliding_window=8, local_global_ratio=1,
+        rope_theta=10_000.0, rope_theta_global=1_000_000.0,
+        qk_norm=True, sandwich_norm=True, embed_scale=True,
+        logit_softcap=30.0, attn_softcap=50.0,
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

@@ -1,0 +1,25 @@
+"""granite-20b [dense] — llama-arch code model, MQA (kv=1)
+[arXiv:2405.04324]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+ARCH_ID = "granite-20b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1,
+        head_dim=128, d_ff=24576, vocab_size=49152,
+        rope_theta=10_000.0,
+        max_position=8192, dtype=jnp.bfloat16,
+        source="[arXiv:2405.04324]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=1,
+        head_dim=32, d_ff=256, vocab_size=257,
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

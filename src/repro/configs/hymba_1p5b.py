@@ -1,0 +1,28 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads, ssm_state=16,
+SWA everywhere except first/middle/last layers [arXiv:2411.13676]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, SSMConfig
+
+ARCH_ID = "hymba-1.5b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="hybrid",
+        num_layers=32, d_model=1600, num_heads=25, num_kv_heads=5,
+        head_dim=64, d_ff=5504, vocab_size=32001,
+        sliding_window=1024,
+        ssm=SSMConfig(state_size=16, expand=2, conv_size=4),
+        max_position=1 << 22, dtype=jnp.bfloat16,
+        source="[arXiv:2411.13676]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="hybrid",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=257,
+        sliding_window=8,
+        ssm=SSMConfig(state_size=4, expand=2, conv_size=4),
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

@@ -1,0 +1,30 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8 + shared
+expert [arXiv:2501.kimi2]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, MoEConfig
+
+ARCH_ID = "kimi-k2-1t-a32b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="moe",
+        num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+        head_dim=112, d_ff=0, vocab_size=163840,
+        moe=MoEConfig(num_experts=384, top_k=8, d_expert=2048,
+                      capacity_factor=1.25, num_shared_experts=1,
+                      d_shared=2048),
+        max_position=131072, dtype=jnp.bfloat16,
+        source="[arXiv:2501.kimi2]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="moe",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=0, vocab_size=257,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64,
+                      capacity_factor=1.25, num_shared_experts=1,
+                      d_shared=64),
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

@@ -1,0 +1,24 @@
+"""minitron-8b [dense] — pruned nemotron [arXiv:2407.14679]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+ARCH_ID = "minitron-8b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+        head_dim=128, d_ff=16384, vocab_size=256000,
+        rope_theta=10_000.0, tie_embeddings=False,
+        max_position=32768, dtype=jnp.bfloat16,
+        source="[arXiv:2407.14679]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=257, tie_embeddings=False,
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

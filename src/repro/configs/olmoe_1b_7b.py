@@ -1,0 +1,27 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8 [arXiv:2409.02060]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, MoEConfig
+
+ARCH_ID = "olmoe-1b-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="moe",
+        num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+        head_dim=128, d_ff=0, vocab_size=50304,
+        moe=MoEConfig(num_experts=64, top_k=8, d_expert=1024,
+                      capacity_factor=1.25),
+        max_position=32768, dtype=jnp.bfloat16,
+        source="[arXiv:2409.02060]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="moe",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        head_dim=32, d_ff=0, vocab_size=257,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64,
+                      capacity_factor=1.25),
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

@@ -1,0 +1,25 @@
+"""qwen1.5-4b [dense] — QKV bias [hf:Qwen/Qwen1.5-0.5B scaled]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+ARCH_ID = "qwen1.5-4b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="dense",
+        num_layers=40, d_model=2560, num_heads=20, num_kv_heads=20,
+        head_dim=128, d_ff=6912, vocab_size=151936,
+        qkv_bias=True, rope_theta=1_000_000.0,
+        max_position=32768, dtype=jnp.bfloat16,
+        source="[hf:Qwen/Qwen1.5-0.5B]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="dense",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        head_dim=32, d_ff=256, vocab_size=257,
+        qkv_bias=True, rope_theta=1_000_000.0,
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

@@ -1,0 +1,28 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution; the ViT/patch-merger is
+a STUB providing projected patch embeddings [arXiv:2409.12191]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, VLMConfig
+
+ARCH_ID = "qwen2-vl-2b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="vlm",
+        num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+        head_dim=128, d_ff=8960, vocab_size=151936,
+        qkv_bias=True, rope_theta=1_000_000.0,
+        vlm=VLMConfig(num_patch_tokens=256, mrope_sections=(16, 24, 24)),
+        max_position=32768, dtype=jnp.bfloat16,
+        source="[arXiv:2409.12191]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="vlm",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=256, vocab_size=257,
+        qkv_bias=True,
+        vlm=VLMConfig(num_patch_tokens=16, mrope_sections=(4, 6, 6)),
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

@@ -1,0 +1,27 @@
+"""whisper-tiny [audio] — enc-dec; conv/mel frontend is a STUB providing
+frame embeddings; this config is the DECODER backbone [arXiv:2212.04356]."""
+import jax.numpy as jnp
+
+from ..models.config import EncDecConfig, ModelConfig
+
+ARCH_ID = "whisper-tiny"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="audio",
+        num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+        head_dim=64, d_ff=1536, vocab_size=51865,
+        learned_positions=True, max_position=448,
+        encdec=EncDecConfig(num_encoder_positions=1500, d_encoder=384),
+        dtype=jnp.bfloat16, source="[arXiv:2212.04356]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="audio",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        head_dim=32, d_ff=256, vocab_size=257,
+        learned_positions=True, max_position=448,
+        encdec=EncDecConfig(num_encoder_positions=32, d_encoder=128),
+        dtype=jnp.float32, source="[smoke]")

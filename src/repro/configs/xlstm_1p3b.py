@@ -1,0 +1,27 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks, xLSTM[7:1] interleave
+[arXiv:2405.04517]."""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, SSMConfig
+
+ARCH_ID = "xlstm-1.3b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, arch_type="ssm",
+        num_layers=48, d_model=2048, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=50304,
+        ssm=SSMConfig(slstm_every=8, mlstm_proj_factor=2.0,
+                      slstm_proj_factor=1.334),
+        max_position=1 << 22, dtype=jnp.bfloat16,
+        source="[arXiv:2405.04517]")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", arch_type="ssm",
+        num_layers=4, d_model=128, num_heads=2, num_kv_heads=2,
+        d_ff=0, vocab_size=257,
+        ssm=SSMConfig(slstm_every=2, mlstm_proj_factor=2.0),
+        max_position=4096, dtype=jnp.float32, source="[smoke]")

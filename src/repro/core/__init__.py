@@ -1,0 +1,9 @@
+from .chain_router import ChainRouter, GenerationResult
+from .executor import (DraftRequest, Executor, PrefillRequest,
+                       RollbackRequest, VerifyRequest)
+from .model_pool import DeviceManager, ModelPool
+from .profiler import EMA, PerformanceProfiler
+from .scheduler import ChainChoice, ModelChainScheduler, expected_accepted
+from .similarity import SimilarityStore, acceptance_from_sim, pairwise_dtv
+from .state_manager import StateManager
+from . import verification

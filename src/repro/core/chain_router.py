@@ -1,0 +1,350 @@
+"""ChainRouter (paper §4.1): central coordination of the multi-level
+speculative generation loop (Listing 1).
+
+Per cycle:
+  1. get the optimal chain + window from the ModelChainScheduler;
+  2. DraftRequest to M_1 (with per-model gap catch-up prefix);
+  3. VerifyRequest to M_2 … M_t, splicing corrected candidates between
+     levels (§4.3);
+  4. consensus rollback: model at level j rolls back to
+     min(k_j, …, k_N) — the prefix of ITS cached candidate that survived
+     every deeper verifier (the paper's 'rollback length … based on
+     consensus');
+  5. commit target-accepted tokens + bonus/correction, update termination.
+
+State sync invariant: a model's cache holds exactly ``seq[:seq_len-1]`` for
+each row once its gap is caught up; gaps (from consensus < k_N) are
+re-fed as the masked prefix of its next block (DESIGN §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import verification as ver
+from .executor import (DraftRequest, Executor, PrefillRequest,
+                       RollbackRequest, VerifyRequest)
+from .model_pool import ModelPool
+from .profiler import PerformanceProfiler
+from .scheduler import ChainChoice, ModelChainScheduler
+from .similarity import SimilarityStore, pairwise_dtv
+from .state_manager import StateManager
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    sequences: List[np.ndarray]      # per row: prompt + generated (trimmed)
+    generated: List[np.ndarray]      # per row: generated only
+    steps: int                       # speculative cycles executed
+    committed_tokens: int
+    chain_history: List[Tuple[Tuple[str, ...], int]]
+    acceptance_lengths: List[float]  # mean accepted per cycle (diagnostics)
+    prefill_wall_s: float = 0.0
+    cycle_wall_s: List[float] = dataclasses.field(default_factory=list)
+    commits_per_cycle: List[np.ndarray] = dataclasses.field(
+        default_factory=list)     # (B,) per cycle
+
+
+class ChainRouter:
+    def __init__(self, pool: ModelPool, target: str,
+                 eos_token: int = -1,
+                 greedy: bool = True,
+                 temperature: float = 1.0,
+                 adaptive: bool = True,
+                 fixed_chain: Optional[Sequence[str]] = None,
+                 fixed_window: Optional[int] = None,
+                 windows: Sequence[int] = (2, 3, 4, 6),
+                 max_chain_len: int = 3,
+                 reschedule_every: int = 1,
+                 seed: int = 0,
+                 profiler: Optional[PerformanceProfiler] = None):
+        self.pool = pool
+        self.target = target
+        self.eos = eos_token
+        self.greedy = greedy
+        self.temperature = temperature
+        self.adaptive = adaptive
+        self.fixed_chain = tuple(fixed_chain) if fixed_chain else None
+        if self.fixed_chain is not None:
+            assert len(set(self.fixed_chain)) == len(self.fixed_chain), \
+                "chains cannot repeat a model (states are keyed by name)"
+            assert self.fixed_chain[-1] == target
+        self.fixed_window = fixed_window
+        self.reschedule_every = reschedule_every
+        self.profiler = profiler or PerformanceProfiler()
+        self.states = StateManager()
+        self.executor = Executor(pool, self.states, self.profiler)
+        self.sims = SimilarityStore()
+        self.scheduler = ModelChainScheduler(
+            pool.names(), target, self.profiler, self.sims,
+            pool.capability(), max_chain_len=max_chain_len, windows=windows)
+        self.rng = jax.random.PRNGKey(seed)
+        # static gap-prefix width: one jit shape per (model, Tc)
+        self.gcap = max(windows) + max_chain_len + 2
+
+    # ------------------------------------------------------------------
+    def _next_rng(self):
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    def _prefill_model(self, m: str, request_id: str, seq: np.ndarray,
+                       seq_len: np.ndarray, max_len: int):
+        """(Re-)create model m's state holding seq[:seq_len-1] per row."""
+        S = int(seq_len.max())
+        seq = seq[:, :S]
+        B = seq.shape[0]
+        idx = np.arange(S)[None, :]
+        valid = idx < (seq_len - 1)[:, None]
+        cfg = self.pool.cfg(m)
+        extras = self.pool.model(m).extras_for(B)
+        probs, _sid = self.executor.prefill(PrefillRequest(
+            model=m, request_id=request_id, tokens=seq.astype(np.int32),
+            valid=valid, max_len=max_len,
+            with_snaps=cfg.arch_type in ("ssm", "hybrid"), extras=extras))
+        return probs
+
+    def _gap_prefix(self, m: str, request_id: str, seq, seq_len, active):
+        """Build [pads…, gap tokens…, t_last] (B, w) + valid mask, with w
+        the smallest width bucket covering the largest row gap (buckets keep
+        the jit-shape count bounded while avoiding gcap-wide pad waste).
+
+        Returns (None, None, gap) if a gap exceeds gcap (caller re-prefills).
+        """
+        B = seq.shape[0]
+        sid = StateManager.key(m, request_id)
+        cache_len = self.states.lengths(sid)          # (B,)
+        gap = (seq_len - 1) - cache_len               # tokens missing
+        gap = np.where(active, gap, 0)
+        if gap.min() < 0 or gap.max() > self.gcap:
+            return None, None, gap
+        w = 1
+        for bucket in (1, 2, 4, 8, self.gcap + 1):
+            if bucket >= int(gap.max()) + 1:
+                w = bucket
+                break
+        prefix = np.zeros((B, w), np.int32)
+        pvalid = np.zeros((B, w), bool)
+        for b in range(B):
+            g = int(gap[b])
+            if g > 0:   # right-aligned: real tokens contiguous before t_last
+                prefix[b, w - 1 - g:w - 1] = \
+                    seq[b, cache_len[b]:cache_len[b] + g]
+                pvalid[b, w - 1 - g:w - 1] = True
+            prefix[b, -1] = seq[b, seq_len[b] - 1]
+            pvalid[b, -1] = bool(active[b])
+        return prefix, pvalid, gap
+
+    def _ensure_capacity(self, m: str, request_id: str, needed: int,
+                         seq, seq_len, max_len) -> None:
+        """Guard against physical buffer exhaustion: defragment masked holes
+        (beyond-paper) and, as a last resort, rebuild the state from the
+        committed stream.  Without this, dynamic_update_slice would CLAMP
+        out-of-range appends and silently corrupt the cache."""
+        sid = StateManager.key(m, request_id)
+        st = self.states.get(sid)
+        if int(st.write_ptr) + needed <= st.capacity:
+            return
+        self.states.maybe_defragment(sid, force=True)
+        self.profiler.count(f"defrag.{m}")
+        st = self.states.get(sid)
+        if int(st.write_ptr) + needed <= st.capacity:
+            return
+        self.states.release(sid)
+        self._prefill_model(m, request_id, seq, seq_len, max_len)
+        self.profiler.count(f"reprefill.{m}")
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: np.ndarray, prompt_lens: np.ndarray,
+                 max_new_tokens, request_id: str = "req0",
+                 capacity_margin: int = 4) -> GenerationResult:
+        B, Tp = prompt.shape
+        budget = (np.full(B, max_new_tokens, np.int64)
+                  if np.isscalar(max_new_tokens)
+                  else np.asarray(max_new_tokens, np.int64))
+        max_new = int(budget.max())
+        W_max = max(self.scheduler.windows)
+        # physical capacity: prompt + worst-case appended blocks
+        max_len = Tp + (max_new + 2) * 2 + self.gcap + \
+            (W_max + self.scheduler.max_chain_len) * capacity_margin
+
+        seq = np.zeros((B, max_len + 8), np.int32)
+        seq[:, :Tp] = prompt
+        seq_len = prompt_lens.astype(np.int64).copy()
+        active = np.ones((B,), bool)
+
+        # --- prefill every pool model; probe pairwise similarity (§4.1) --
+        import time as _time
+        t0 = _time.perf_counter()
+        probe: Dict[str, np.ndarray] = {}
+        for m in self.pool.names():
+            probe[m] = self._prefill_model(m, request_id, seq, seq_len,
+                                           max_len)
+        self.sims.update_many(pairwise_dtv(probe))
+        prefill_wall = _time.perf_counter() - t0
+
+        chain_history, acc_lens = [], []
+        cycle_wall, commits_hist = [], []
+        committed = 0
+        steps = 0
+        choice: Optional[ChainChoice] = None
+        while active.any() and committed < max_new * B:
+            if choice is None or (self.adaptive
+                                  and steps % self.reschedule_every == 0):
+                if self.fixed_chain is not None:
+                    choice = ChainChoice(
+                        self.fixed_chain, self.fixed_window or 4, 0.0)
+                else:
+                    choice = self.scheduler.get_optimal_chain()
+            chain, W = choice.chain, choice.window
+            chain_history.append((chain, W))
+
+            tc = _time.perf_counter()
+            n_acc = self._one_cycle(chain, W, request_id, seq, seq_len,
+                                    active)
+            cycle_wall.append(_time.perf_counter() - tc)
+            commits_hist.append(n_acc.copy())
+            acc_lens.append(float(np.mean(n_acc[active])) if active.any()
+                            else 0.0)
+            committed += int(n_acc.sum())
+            steps += 1
+
+            # termination per row (per-row budgets; over-committed tokens
+            # in the final cycle are truncated — the prefix still equals
+            # target-only output, so equivalence is preserved)
+            for b in range(B):
+                if not active[b]:
+                    continue
+                if seq_len[b] - prompt_lens[b] >= budget[b]:
+                    seq_len[b] = prompt_lens[b] + budget[b]
+                    active[b] = False
+                if self.eos >= 0:
+                    row = seq[b, prompt_lens[b]:seq_len[b]]
+                    hits = np.where(row == self.eos)[0]
+                    if hits.size:
+                        seq_len[b] = prompt_lens[b] + hits[0] + 1
+                        active[b] = False
+            if steps > max_new * 4 + 16:   # safety net
+                break
+
+        self.states.release_request(request_id)
+        seqs = [seq[b, :seq_len[b]].copy() for b in range(B)]
+        gens = [seq[b, prompt_lens[b]:seq_len[b]].copy() for b in range(B)]
+        return GenerationResult(seqs, gens, steps,
+                                int(sum(len(g) for g in gens)),
+                                chain_history, acc_lens,
+                                prefill_wall_s=prefill_wall,
+                                cycle_wall_s=cycle_wall,
+                                commits_per_cycle=commits_hist)
+
+    # ------------------------------------------------------------------
+    def _one_cycle(self, chain: Tuple[str, ...], W: int, request_id: str,
+                   seq: np.ndarray, seq_len: np.ndarray,
+                   active: np.ndarray) -> np.ndarray:
+        """Execute one speculative cycle; mutates seq/seq_len in place.
+        Returns per-row committed token count."""
+        B = seq.shape[0]
+        max_len = self.states.get(
+            StateManager.key(self.target, request_id)).capacity
+
+        # --- ensure chain members are synced (or re-prefill laggards) ----
+        prefixes = {}
+        for m in chain:
+            needed = self.gcap + 2 + W + len(chain)
+            self._ensure_capacity(m, request_id, needed, seq, seq_len,
+                                  max_len)
+            pfx, pval, gap = self._gap_prefix(m, request_id, seq, seq_len,
+                                              active)
+            if pfx is None:   # fell too far behind -> catch-up prefill
+                self.states.release(StateManager.key(m, request_id))
+                self._prefill_model(m, request_id, seq, seq_len, max_len)
+                pfx, pval, gap = self._gap_prefix(m, request_id, seq,
+                                                  seq_len, active)
+            prefixes[m] = (pfx, pval)
+
+        # --- target-only chain: plain autoregressive step -----------------
+        if len(chain) == 1:
+            pfx, pval = prefixes[self.target]
+            toks, _probs = self.executor.draft(DraftRequest(
+                model=self.target, request_id=request_id,
+                prefix_tokens=pfx, prefix_valid=pval, window=1,
+                active=active, greedy=self.greedy,
+                temperature=self.temperature, rng=self._next_rng()))
+            nxt = toks[:, 0]
+            n_committed = np.where(active, 1, 0)
+            for b in range(B):
+                if active[b]:
+                    seq[b, seq_len[b]] = nxt[b]
+                    seq_len[b] += 1
+            return n_committed
+
+        # --- draft --------------------------------------------------------
+        m1 = chain[0]
+        pfx, pval = prefixes[m1]
+        cand, cprobs = self.executor.draft(DraftRequest(
+            model=m1, request_id=request_id, prefix_tokens=pfx,
+            prefix_valid=pval, window=W, active=active, greedy=self.greedy,
+            temperature=self.temperature, rng=self._next_rng()))
+        valid_len = np.full((B,), W, np.int32)
+
+        # --- staged verification (levels 2..N) -----------------------------
+        ks: List[np.ndarray] = []
+        producer = m1
+        res = None
+        for j, m in enumerate(chain[1:], start=2):
+            pfx, pval = prefixes[m]
+            res = self.executor.verify(VerifyRequest(
+                model=m, request_id=request_id, prefix_tokens=pfx,
+                prefix_valid=pval, candidates=cand,
+                candidate_probs=cprobs, valid_len=valid_len, active=active,
+                greedy=self.greedy, temperature=self.temperature,
+                rng=self._next_rng()))
+            ks.append(np.asarray(res.num_accepted))
+            # similarity feedback (Eq. 5/6) between adjacent chain levels
+            if active.any():
+                self.sims.update(producer, m,
+                                 float(np.mean(res.dtv[active])))
+            self.profiler.count(f"accept.{producer}->{m}",
+                                float(np.sum(res.num_accepted[active])))
+            if m != chain[-1]:
+                cand_j, cprobs_j, vlen = ver.splice_candidates(
+                    jax.numpy.asarray(cand),
+                    jax.numpy.asarray(cprobs) if cprobs is not None else None,
+                    jax.tree.map(jax.numpy.asarray, res))
+                cand = np.asarray(cand_j)
+                cprobs = np.asarray(cprobs_j) if cprobs_j is not None else None
+                valid_len = np.asarray(vlen)
+            producer = m
+
+        k_N = np.asarray(res.num_accepted)          # target acceptance
+        next_token = np.asarray(res.next_token)
+
+        # --- consensus rollback (paper §4.3 RollbackProcessor) -------------
+        # level j in [1..N-1] holds a candidate of length W + (j-1);
+        # consensus_j = min(k_j, ..., k_N) in shared position coordinates.
+        ks_arr = np.stack(ks, axis=0)               # (N-1, B)
+        for j, m in enumerate(chain[:-1], start=1):
+            tc_j = W + (j - 1)
+            consensus = ks_arr[j - 1:].min(axis=0)
+            r = np.where(active, tc_j - np.minimum(consensus, tc_j), 0)
+            self.executor.rollback(RollbackRequest(
+                model=m, request_id=request_id, r=r.astype(np.int32)))
+        # target rolls back its own rejects
+        self.executor.rollback(RollbackRequest(
+            model=chain[-1], request_id=request_id,
+            r=np.asarray(res.rollback, np.int32)))
+
+        # --- commit ---------------------------------------------------------
+        n_committed = np.where(active, k_N + 1, 0)
+        for b in range(B):
+            if not active[b]:
+                continue
+            kb = int(k_N[b])
+            seq[b, seq_len[b]:seq_len[b] + kb] = cand[b, :kb]
+            seq[b, seq_len[b] + kb] = next_token[b]
+            seq_len[b] += kb + 1
+        self.profiler.count("cycles")
+        self.profiler.count("committed", float(n_committed.sum()))
+        return n_committed

@@ -1,0 +1,272 @@
+"""Executor + stateless Processors (paper §3.2, §4.3).
+
+The Executor is the data-plane dispatcher: it receives operation requests
+from the ChainRouter, routes them to the specialized processors
+(Prefill/Draft/Verify/Rollback), resolves models via the ModelPool and
+state via the StateManager, and wraps every call with PerformanceProfiler
+timing (the feedback loop of §4.6).
+
+All device computation goes through per-(model, op, shape) jitted callables
+cached here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import verification as ver
+from .model_pool import ModelPool
+from .profiler import PerformanceProfiler
+from .state_manager import StateManager
+
+
+# ---------------------------------------------------------------------------
+# Request messages (paper §4.1 "constructs PrefillRequest messages…")
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PrefillRequest:
+    model: str
+    request_id: str
+    tokens: np.ndarray            # (B, Tp) int32
+    valid: np.ndarray             # (B, Tp) bool
+    max_len: int
+    with_snaps: bool = False
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class DraftRequest:
+    model: str
+    request_id: str
+    prefix_tokens: np.ndarray     # (B, G+1) gap catch-up ++ t_last
+    prefix_valid: np.ndarray      # (B, G+1) bool
+    window: int
+    active: np.ndarray            # (B,) bool
+    greedy: bool = True
+    temperature: float = 1.0
+    rng: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class VerifyRequest:
+    model: str
+    request_id: str
+    prefix_tokens: np.ndarray     # (B, G+1)
+    prefix_valid: np.ndarray      # (B, G+1)
+    candidates: np.ndarray        # (B, Tc)
+    candidate_probs: Optional[np.ndarray]  # (B, Tc, V) producer dists
+    valid_len: Optional[np.ndarray]        # (B,) legit candidate length
+    active: np.ndarray            # (B,)
+    greedy: bool = True
+    temperature: float = 1.0
+    rng: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class RollbackRequest:
+    model: str
+    request_id: str
+    r: np.ndarray                 # (B,) int32
+
+
+class Executor:
+    def __init__(self, pool: ModelPool, states: StateManager,
+                 profiler: PerformanceProfiler):
+        self.pool = pool
+        self.states = states
+        self.profiler = profiler
+        self._jit_cache: Dict[tuple, Any] = {}
+
+    # ---- jitted primitive builders ------------------------------------
+    def _fwd(self, model: str, logits_mode: str):
+        key = ("fwd", model, logits_mode)
+        if key not in self._jit_cache:
+            lm = self.pool.model(model)
+
+            @partial(jax.jit, static_argnames=())
+            def f(params, state, tokens, valid, extras):
+                return lm.decode(params, state, tokens, valid=valid,
+                                 logits_mode=logits_mode, **extras)
+            self._jit_cache[key] = f
+        return self._jit_cache[key]
+
+    def _rollback(self, model: str):
+        key = ("rb", model)
+        if key not in self._jit_cache:
+            lm = self.pool.model(model)
+            self._jit_cache[key] = jax.jit(lm.rollback)
+        return self._jit_cache[key]
+
+    def _sample(self, greedy: bool, temperature: float):
+        key = ("sample", greedy, temperature)
+        if key not in self._jit_cache:
+            if greedy:
+                def s(logits, rng):
+                    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+                    return jnp.argmax(logits, -1).astype(jnp.int32), probs
+            else:
+                def s(logits, rng):
+                    lt = logits.astype(jnp.float32) / temperature
+                    probs = jax.nn.softmax(lt, -1)
+                    return (jax.random.categorical(rng, lt).astype(jnp.int32),
+                            probs)
+            self._jit_cache[key] = jax.jit(s)
+        return self._jit_cache[key]
+
+    # ---- processors ----------------------------------------------------
+    def prefill(self, req: PrefillRequest):
+        """PrefillProcessor: populate initial ModelState, return last-token
+        probs (used for similarity probes) and the state id."""
+        lm = self.pool.model(req.model)
+        params = self.pool.params(req.model)
+        sid = StateManager.key(req.model, req.request_id)
+        B = req.tokens.shape[0]
+        state, _ = lm.make_state(B, req.max_len, with_snaps=req.with_snaps)
+        key = ("prefillop", req.model, req.tokens.shape)
+        if key not in self._jit_cache:
+            def f(params, state, tokens, valid, extras):
+                return lm.prefill(params, state, tokens, valid=valid,
+                                  logits_mode="last", **extras)
+            self._jit_cache[key] = jax.jit(f)
+        with self.profiler.timed("prefill", req.model,
+                                 tokens=int(req.valid.sum())):
+            logits, state = self._jit_cache[key](
+                params, state, jnp.asarray(req.tokens),
+                jnp.asarray(req.valid), req.extras)
+            logits = jax.block_until_ready(logits)
+        self.states.create(sid, state)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+        return np.asarray(probs), sid
+
+    def _draft_scan(self, model: str, window: int, greedy: bool,
+                    temperature: float):
+        """Whole-window drafting fused into ONE jitted program: the prefix
+        pass + (W-1) decode steps run as a lax.scan, eliminating W host
+        round-trips per cycle (§Perf serving-path iteration 1)."""
+        key = ("draftscan", model, window, greedy, temperature)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        lm = self.pool.model(model)
+
+        def sample(logits, k):
+            lt = logits.astype(jnp.float32) / temperature
+            probs = jax.nn.softmax(lt, -1)
+            if greedy:
+                return jnp.argmax(logits, -1).astype(jnp.int32), probs
+            return jax.random.categorical(k, lt).astype(jnp.int32), probs
+
+        @jax.jit
+        def f(params, state, prefix_tokens, prefix_valid, active, rng):
+            logits, state = lm.decode(params, state, prefix_tokens,
+                                      valid=prefix_valid & active[:, None],
+                                      logits_mode="all")
+            rng, k0 = jax.random.split(rng)
+            tok0, probs0 = sample(logits[:, -1], k0)
+
+            def step(carry, k):
+                state, tok = carry
+                lg, state = lm.decode(params, state, tok[:, None],
+                                      valid=active[:, None],
+                                      logits_mode="all")
+                nxt, probs = sample(lg[:, -1], k)
+                return (state, nxt), (tok, probs)
+
+            keys = jax.random.split(rng, max(window - 1, 1))
+            if window > 1:
+                (state, last), (toks, probs) = jax.lax.scan(
+                    step, (state, tok0), keys[:window - 1])
+                all_toks = jnp.concatenate(
+                    [jnp.swapaxes(toks, 0, 1), last[:, None]], axis=1)
+                all_probs = jnp.concatenate(
+                    [probs0[:, None], jnp.swapaxes(probs, 0, 1)], axis=1)
+            else:
+                all_toks = tok0[:, None]
+                all_probs = probs0[:, None]
+            return all_toks, all_probs, state
+
+        self._jit_cache[key] = f
+        return f
+
+    def draft(self, req: DraftRequest):
+        """DraftProcessor: W speculative tokens from the draft model.
+
+        Returns (draft_tokens (B, W), draft_probs (B, W, V))."""
+        params = self.pool.params(req.model)
+        sid = StateManager.key(req.model, req.request_id)
+        state = self.states.get(sid)
+        rng = req.rng if req.rng is not None else jax.random.PRNGKey(0)
+        f = self._draft_scan(req.model, req.window, req.greedy,
+                             req.temperature)
+        import time as _time
+        t0 = _time.perf_counter()
+        toks, probs, state = f(params, state,
+                               jnp.asarray(req.prefix_tokens),
+                               jnp.asarray(req.prefix_valid),
+                               jnp.asarray(req.active), rng)
+        toks = jax.block_until_ready(toks)
+        dt = _time.perf_counter() - t0
+        # amortized per-token draft time feeds the scheduler's T_i
+        self.profiler.record("decode1", req.model, dt / req.window,
+                             tokens=req.window)
+        self.states.update(sid, state)
+        return np.asarray(toks), np.asarray(probs)
+
+    def verify(self, req: VerifyRequest):
+        """VerifyProcessor: one forward pass over [gap ++ t_last ++ cand],
+        acceptance rule, returns VerifyResult (numpy)."""
+        lm = self.pool.model(req.model)
+        params = self.pool.params(req.model)
+        sid = StateManager.key(req.model, req.request_id)
+        state = self.states.get(sid)
+        fwd_all = self._fwd(req.model, "all")
+        G1 = req.prefix_tokens.shape[1]          # gap + 1 (t_last)
+        Tc = req.candidates.shape[1]
+        active = jnp.asarray(req.active)
+        block = np.concatenate([req.prefix_tokens, req.candidates], axis=1)
+        bvalid = np.concatenate(
+            [req.prefix_valid, np.ones_like(req.candidates, bool)], axis=1)
+        bvalid = jnp.asarray(bvalid) & active[:, None]
+
+        with self.profiler.timed("verify", req.model, tokens=Tc,
+                                 block=Tc + 1):
+            logits, state = fwd_all(params, state, jnp.asarray(block),
+                                    bvalid, {})
+            logits = jax.block_until_ready(logits)
+        self.states.update(sid, state)
+
+        vlogits = logits[:, G1 - 1:]             # (B, Tc+1, V)
+        cands = jnp.asarray(req.candidates)
+        cprobs = (jnp.asarray(req.candidate_probs)
+                  if req.candidate_probs is not None else None)
+        key = ("verifymath", req.greedy, vlogits.shape, req.temperature,
+               req.valid_len is not None)
+        if key not in self._jit_cache:
+            if req.greedy:
+                self._jit_cache[key] = jax.jit(ver.verify_greedy)
+            else:
+                self._jit_cache[key] = jax.jit(partial(
+                    ver.verify_sampling, temperature=req.temperature))
+        if req.greedy:
+            res = self._jit_cache[key](cands, vlogits, cprobs, active)
+        else:
+            res = self._jit_cache[key](
+                cands, vlogits, cprobs, req.rng, active=active,
+                valid_len=(jnp.asarray(req.valid_len)
+                           if req.valid_len is not None else None))
+        return jax.tree.map(np.asarray, res)
+
+    def rollback(self, req: RollbackRequest):
+        """RollbackProcessor: consensus rollback via StateManager (Eq. 8/9;
+        SSM archs restore snapshots first — model.rollback handles both)."""
+        sid = StateManager.key(req.model, req.request_id)
+        state = self.states.get(sid)
+        with self.profiler.timed("rollback", req.model,
+                                 tokens=int(req.r.sum())):
+            state = self._rollback(req.model)(state, jnp.asarray(req.r))
+            jax.block_until_ready(state.write_ptr)
+        self.states.update(sid, state)

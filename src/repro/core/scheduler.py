@@ -1,0 +1,134 @@
+"""ModelChainScheduler (paper §4.2, Algorithm 1, Eq. 7).
+
+Continuously selects the chain [M_1, …, M_N = M_t] (and the draft window W)
+minimizing the predicted effective latency per committed target token, from
+EMA-profiled per-model times and SimScore-derived acceptance probabilities.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .profiler import PerformanceProfiler
+from .similarity import SimilarityStore, acceptance_from_sim
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainChoice:
+    chain: Tuple[str, ...]          # model names, draft first, target last
+    window: int                     # W
+    predicted_t_eff: float          # seconds per committed target token
+    table: Dict = dataclasses.field(default_factory=dict, compare=False)
+
+
+def expected_accepted(alpha: float, w: float) -> float:
+    """E[accepted | window w, acceptance α] = Σ_{k=1..w} α^k  (paper §4.2,
+    continuous in w so staged filters compose)."""
+    if alpha <= 1e-9:
+        return 0.0
+    if alpha >= 1.0 - 1e-9:
+        return w
+    return alpha * (1.0 - alpha ** w) / (1.0 - alpha)
+
+
+class ModelChainScheduler:
+    """Implements Algorithm 1.
+
+    Cost model (Eq. 7): for chain C = [M_1 … M_N], window W:
+        numerator   = W·T_1(decode)  +  Σ_{j≥2} VerifyCost_j(block_j)
+        denominator = E[target tokens committed per cycle]
+    VerifyCost_j uses the *measured* verify wall time for that block length
+    when available (more faithful to 'real-time performance profiling' than
+    a fixed analytic form), falling back to T_j·(1 + ν·block) cold-start.
+    A chain-switch penalty (catch-up prefill of newly-joining models,
+    amortized) discourages thrashing — beyond-paper addition, DESIGN §8.
+    """
+
+    def __init__(self, model_names: Sequence[str], target: str,
+                 profiler: PerformanceProfiler, sims: SimilarityStore,
+                 capability: Dict[str, float],
+                 max_chain_len: int = 4,
+                 windows: Sequence[int] = (2, 3, 4, 6, 8),
+                 verify_overhead: float = 0.1,
+                 switch_penalty_steps: float = 32.0,
+                 default_decode_s: float = 0.05):
+        assert target in model_names
+        self.models = list(model_names)
+        self.target = target
+        self.profiler = profiler
+        self.sims = sims
+        self.capability = capability  # e.g. param count — sorts the pool
+        self.max_chain_len = max_chain_len
+        self.windows = tuple(windows)
+        self.nu = verify_overhead
+        self.switch_penalty_steps = switch_penalty_steps
+        self.default_decode_s = default_decode_s
+        self._last_choice: Optional[ChainChoice] = None
+
+    # ---- Step 1: candidate chains (Alg. 1 lines 2-3) -------------------
+    def candidate_chains(self) -> List[Tuple[str, ...]]:
+        others = sorted(
+            (m for m in self.models if m != self.target),
+            key=lambda m: self.capability[m])
+        chains: List[Tuple[str, ...]] = [(self.target,)]
+        for depth in range(1, self.max_chain_len):
+            for combo in itertools.combinations(others, depth):
+                # combo is capability-ascending -> draft first
+                chains.append(tuple(combo) + (self.target,))
+        return chains
+
+    # ---- Eq. 7 predictor ------------------------------------------------
+    def predict_t_eff(self, chain: Sequence[str], window: int,
+                      alphas: Optional[Sequence[float]] = None) -> float:
+        prof = self.profiler
+        T = {m: prof.decode_time(m, self._default_time(m))
+             for m in chain}
+        if len(chain) == 1:
+            return T[chain[0]]
+        if alphas is None:
+            alphas = [
+                acceptance_from_sim(self.sims.sim_score(chain[i], chain[i + 1]))
+                for i in range(len(chain) - 1)]
+
+        lam = float(window)          # candidate length entering level j+1
+        cost = window * T[chain[0]]  # W sequential draft steps
+        committed = 0.0
+        for j in range(1, len(chain)):
+            block = lam
+            verify_default = T[chain[j]] * (1.0 + self.nu * block)
+            cost += prof.verify_time(chain[j], int(round(block)) + 1,
+                                     verify_default)
+            acc = expected_accepted(alphas[j - 1], lam)
+            if j < len(chain) - 1:
+                lam = acc + 1.0      # accepted prefix + correction joins
+            else:
+                committed = acc + 1.0  # target: accepted + bonus
+        return cost / max(committed, 1e-9)
+
+    def _default_time(self, m: str) -> float:
+        # cold start: scale a nominal decode time by relative capability
+        base = min(self.capability.values())
+        return self.default_decode_s * (self.capability[m] / base) ** 0.5
+
+    # ---- Steps 2-3: select optimum (Alg. 1 lines 6-18) ------------------
+    def get_optimal_chain(self) -> ChainChoice:
+        best = None
+        table = {}
+        prev = self._last_choice.chain if self._last_choice else None
+        for chain in self.candidate_chains():
+            for w in (self.windows if len(chain) > 1 else (1,)):
+                t = self.predict_t_eff(chain, w)
+                if prev is not None and chain != prev:
+                    # amortized catch-up prefill for newly joining models
+                    joiners = set(chain) - set(prev)
+                    pen = sum(self.profiler.prefill_time(m, 10 * self._default_time(m))
+                              for m in joiners)
+                    t = t + pen / self.switch_penalty_steps
+                table[(chain, w)] = t
+                if best is None or t < best.predicted_t_eff:
+                    best = ChainChoice(chain, w, t)
+        best = ChainChoice(best.chain, best.window, best.predicted_t_eff,
+                           table)
+        self._last_choice = best
+        return best

@@ -1,0 +1,67 @@
+"""StateManager (paper §4.4): lifecycle + consistent updates + atomic
+rollbacks for per-model ModelStates.
+
+Atomicity note: JAX states are immutable pytrees; every update is
+replace-on-success, so a failed processor call can never leave a state
+half-mutated — this *is* the paper's atomic-rollback requirement, obtained
+structurally rather than via locking.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.kv_cache import ModelState, fragmentation, defragment
+
+
+class StateManager:
+    def __init__(self, defrag_threshold: float = 0.5):
+        self._states: Dict[str, ModelState] = {}
+        self._lock = threading.Lock()
+        self.defrag_threshold = defrag_threshold
+        self.defrag_count = 0
+
+    def create(self, state_id: str, state: ModelState):
+        with self._lock:
+            self._states[state_id] = state
+
+    def get(self, state_id: str) -> ModelState:
+        return self._states[state_id]
+
+    def update(self, state_id: str, state: ModelState):
+        with self._lock:
+            self._states[state_id] = state
+
+    def release(self, state_id: str):
+        with self._lock:
+            self._states.pop(state_id, None)
+
+    def release_request(self, request_id: str):
+        """GC every model's state for a finished request."""
+        with self._lock:
+            for k in [k for k in self._states if k.endswith("/" + request_id)]:
+                self._states.pop(k)
+
+    def maybe_defragment(self, state_id: str, force: bool = False) -> bool:
+        """Beyond-paper: compact masked holes when fragmentation is high
+        (or unconditionally when ``force``, e.g. on capacity pressure)."""
+        st = self._states[state_id]
+        frag = float(fragmentation(st))
+        if force or frag > self.defrag_threshold:
+            self.update(state_id, defragment(st))
+            self.defrag_count += 1
+            return True
+        return False
+
+    def lengths(self, state_id: str) -> np.ndarray:
+        return np.asarray(self._states[state_id].length)
+
+    def capacity_used(self, state_id: str) -> int:
+        return int(self._states[state_id].write_ptr)
+
+    @staticmethod
+    def key(model: str, request_id: str) -> str:
+        return f"{model}/{request_id}"

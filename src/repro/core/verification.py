@@ -1,0 +1,166 @@
+"""Speculative verification rules (paper §2.2 step 3, §4.3 VerifyProcessor).
+
+Protocol invariant (used by every model in the chain):
+  - a model's committed cache EXCLUDES the most recent committed token
+    ``t_last``;
+  - a verify pass feeds ``[t_last, c_0, …, c_{T-1}]`` (T+1 tokens) and gets
+    logits ``l_0 … l_T`` where ``l_i`` verifies ``c_i`` and ``l_T`` is the
+    bonus position;
+  - after accepting ``k`` tokens the model commits ``t_last, c_0…c_{k-1}``,
+    the correction/bonus becomes the new ``t_last'``, and the state rolls
+    back by ``r = T - k`` (paper Eq. 8/9).
+
+Two acceptance rules:
+  greedy   — accept iff candidate == argmax(verifier logits); output stream
+             is bit-identical to target-only greedy decoding (paper §5
+             Output Quality check).
+  sampling — Leviathan et al. rejection sampling: accept c_i w.p.
+             min(1, p(c_i)/q(c_i)); on rejection resample from
+             norm(max(p-q, 0)).  Distribution-preserving.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VerifyResult(NamedTuple):
+    num_accepted: jnp.ndarray    # (B,) int32 — k, accepted candidate prefix
+    next_token: jnp.ndarray      # (B,) int32 — correction (k<T) or bonus (k=T)
+    next_probs: jnp.ndarray      # (B, V) — distribution next_token was drawn
+                                 # from (producer dist for the next level)
+    rollback: jnp.ndarray        # (B,) int32 — r = T - k
+    dtv: jnp.ndarray             # (B,) float32 — mean TV distance p vs q over
+                                 # the block (feeds SimScore, paper Eq. 5/6)
+
+
+def _dtv(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """0.5 * sum_v |p - q| over the last axis (paper Eq. 5)."""
+    return 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
+
+
+def verify_greedy(candidates: jnp.ndarray,
+                  verifier_logits: jnp.ndarray,
+                  candidate_probs: Optional[jnp.ndarray] = None,
+                  active: Optional[jnp.ndarray] = None) -> VerifyResult:
+    """candidates: (B, T); verifier_logits: (B, T+1, V).
+
+    candidate_probs (B, T, V) is optional — used only for the DTV metric.
+    active (B,) masks finished rows (their result is a no-op).
+    """
+    B, T = candidates.shape
+    V = verifier_logits.shape[-1]
+    preds = jnp.argmax(verifier_logits, axis=-1)            # (B, T+1)
+    match = preds[:, :T] == candidates                       # (B, T)
+    k = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    next_token = jnp.take_along_axis(preds, k[:, None], axis=1)[:, 0]
+    p = jax.nn.softmax(verifier_logits.astype(jnp.float32), axis=-1)
+    next_probs = jnp.take_along_axis(
+        p, k[:, None, None], axis=1)[:, 0]                   # (B, V)
+    if candidate_probs is not None:
+        dtv = jnp.mean(_dtv(p[:, :T], candidate_probs.astype(jnp.float32)),
+                       axis=-1)
+    else:
+        dtv = jnp.zeros((B,), jnp.float32)
+    r = (T - k).astype(jnp.int32)
+    if active is not None:
+        k = jnp.where(active, k, 0)
+        # inactive rows appended nothing valid -> nothing to roll back
+        r = jnp.where(active, r, 0)
+        next_token = jnp.where(active, next_token, 0)
+    return VerifyResult(k.astype(jnp.int32), next_token.astype(jnp.int32),
+                        next_probs, r, dtv)
+
+
+def verify_sampling(candidates: jnp.ndarray,
+                    verifier_logits: jnp.ndarray,
+                    candidate_probs: jnp.ndarray,
+                    key: jax.Array,
+                    temperature: float = 1.0,
+                    active: Optional[jnp.ndarray] = None,
+                    valid_len: Optional[jnp.ndarray] = None) -> VerifyResult:
+    """Leviathan rejection sampling.
+
+    candidate_probs must be the *producer* distribution of each candidate
+    token (draft model probs, or the residual distribution a previous
+    verifier resampled from).  ``valid_len`` (B,) bounds acceptance to the
+    legitimately-produced candidate prefix (multi-level padding beyond a
+    prior level's correction token is NOT distribution-faithful and must be
+    force-rejected; greedy mode has no such restriction — an accepted
+    padding token equals the verifier argmax by construction).
+    """
+    B, T = candidates.shape
+    V = verifier_logits.shape[-1]
+    p = jax.nn.softmax(verifier_logits.astype(jnp.float32) / temperature,
+                       axis=-1)                              # (B, T+1, V)
+    q = candidate_probs.astype(jnp.float32)                  # (B, T, V)
+    p_tok = jnp.take_along_axis(p[:, :T], candidates[..., None],
+                                axis=-1)[..., 0]             # (B, T)
+    q_tok = jnp.take_along_axis(q, candidates[..., None], axis=-1)[..., 0]
+    k_u, k_res = jax.random.split(key)
+    u = jax.random.uniform(k_u, (B, T))
+    accept = u < jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-20))
+    if valid_len is not None:
+        accept = accept & (jnp.arange(T, dtype=jnp.int32)[None, :]
+                           < valid_len[:, None])
+    k = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+    # residual distribution at the rejection position; bonus: p itself
+    p_k = jnp.take_along_axis(p, k[:, None, None], axis=1)[:, 0]   # (B, V)
+    q_pad = jnp.concatenate([q, jnp.zeros((B, 1, V), q.dtype)], axis=1)
+    q_k = jnp.take_along_axis(q_pad, k[:, None, None], axis=1)[:, 0]
+    is_bonus = (k == T)[:, None]
+    resid = jnp.maximum(p_k - q_k, 0.0)
+    resid_sum = jnp.sum(resid, axis=-1, keepdims=True)
+    # degenerate residual (p==q exactly) -> fall back to p
+    resid = jnp.where(resid_sum > 1e-20, resid / jnp.maximum(resid_sum, 1e-20),
+                      p_k)
+    next_probs = jnp.where(is_bonus, p_k, resid)
+    next_token = jax.random.categorical(
+        k_res, jnp.log(jnp.maximum(next_probs, 1e-30)))
+    dtv = jnp.mean(_dtv(p[:, :T], q), axis=-1)
+    r = (T - k).astype(jnp.int32)
+    if active is not None:
+        k = jnp.where(active, k, 0)
+        r = jnp.where(active, r, 0)
+        next_token = jnp.where(active, next_token, 0)
+    return VerifyResult(k.astype(jnp.int32), next_token.astype(jnp.int32),
+                        next_probs, r, dtv)
+
+
+# ---------------------------------------------------------------------------
+# Candidate assembly between levels
+# ---------------------------------------------------------------------------
+def splice_candidates(candidates: jnp.ndarray,
+                      candidate_probs: Optional[jnp.ndarray],
+                      res: VerifyResult) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Build the next level's candidate block from this level's outcome.
+
+    Next candidate = accepted prefix ++ [correction/bonus token] ++ padding.
+    Padding positions (beyond k+1) repeat the correction token but are
+    DROPPED by later levels automatically because verification truncates at
+    the first mismatch only within valid length — we pass the true length
+    implicitly by masking probs; for greedy mode padding is harmless because
+    positions after the first mismatch never commit.
+
+    Returns (next_candidates (B, T+1), next_probs or None, valid_len (B,)).
+    """
+    B, T = candidates.shape
+    k = res.num_accepted
+    idx = jnp.arange(T + 1, dtype=jnp.int32)[None, :]
+    cand_pad = jnp.concatenate(
+        [candidates, jnp.zeros((B, 1), candidates.dtype)], axis=1)
+    next_cand = jnp.where(idx < k[:, None], cand_pad,
+                          res.next_token[:, None])
+    valid_len = k + 1
+    if candidate_probs is None:
+        return next_cand, None, valid_len
+    V = candidate_probs.shape[-1]
+    probs_pad = jnp.concatenate(
+        [candidate_probs, jnp.zeros((B, 1, V), candidate_probs.dtype)], axis=1)
+    next_probs = jnp.where((idx < k[:, None])[..., None], probs_pad,
+                           res.next_probs[:, None, :])
+    return next_cand, next_probs, valid_len

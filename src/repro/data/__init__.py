@@ -1,0 +1,2 @@
+from .synthetic import CorpusConfig, SyntheticCorpus
+from .workload import DATASET_PROFILES, Request, make_workload

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: masked single-token decode attention (flash-decode).
+
+The paper's cache_mask (Eq. 8) is consumed INSIDE the kernel: invalid KV
+slots never contribute to the online softmax, so logical rollback costs
+nothing at attention time.  GQA: the g query heads sharing one KV head are
+processed together as the (g × BLK_S) MXU tile.
+
+Grid: (B, Hkv, S/BLK_S) — the minor S axis is sequential on TPU, so the
+(m, l, acc) accumulators live in revisited output blocks; the wrapper
+normalizes acc/l at the end (no in-kernel finalization step needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_S = 512
+NEG = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref,
+                 *, scale):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (BLK_S, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (BLK_S, D)
+    msk = mask_ref[0]                                     # (BLK_S,)
+
+    scores = q @ k.T                                      # (g, BLK_S)
+    scores = jnp.where(msk[None, :], scores, NEG)
+
+    m_old = m_ref[0, 0][:, :1]                            # (g, 1)
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.where(scores > NEG * 0.5, jnp.exp(scores - m_new), 0.0)
+    corr = jnp.where(m_old > NEG * 0.5, jnp.exp(m_old - m_new), 0.0)
+
+    l_ref[0, 0] = jnp.broadcast_to(
+        l_ref[0, 0][:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True),
+        l_ref[0, 0].shape)
+    acc_ref[0, 0] = acc_ref[0, 0] * corr + p @ v
+    m_ref[0, 0] = jnp.broadcast_to(m_new, m_ref[0, 0].shape)
+
+
+def masked_decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray,
+                                   v: jnp.ndarray, mask: jnp.ndarray,
+                                   scale: float | None = None,
+                                   interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, D); k, v: (B, S, Hkv, D); mask: (B, S).
+
+    S must be a BLK_S multiple and D 128-aligned (ops.py pads)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, g, D)
+    grid = (B, Hkv, S // BLK_S)
+
+    acc, m, l = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, BLK_S, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, BLK_S, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, BLK_S), lambda b, h, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g, 128), lambda b, h, s: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, g, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, mask)
+
+    l1 = l[..., :1]
+    out = jnp.where(l1 > 0, acc / jnp.maximum(l1, 1e-30), 0.0)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,88 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle padding to tile boundaries, dtype plumbing, and backend selection:
+on TPU the kernels run compiled; on this CPU host they run in interpret
+mode (same kernel body, Python-executed) — correctness is validated against
+the ref.py oracles either way.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as _attn
+from . import dtv as _dtv
+from . import verify as _verify
+from . import ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis, value):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("use_kernel",))
+def dtv(a_logits: jnp.ndarray, b_logits: jnp.ndarray,
+        use_kernel: bool = True) -> jnp.ndarray:
+    """(B, V) x2 -> (B,) total variation distance (paper Eq. 5)."""
+    if not use_kernel:
+        return ref.dtv_ref(a_logits, b_logits)
+    B, V = a_logits.shape
+    a = _pad_to(_pad_to(a_logits, _dtv.BLK_V, 1, _dtv.NEG),
+                _dtv.BLK_R, 0, _dtv.NEG)
+    b = _pad_to(_pad_to(b_logits, _dtv.BLK_V, 1, _dtv.NEG),
+                _dtv.BLK_R, 0, _dtv.NEG)
+    return _dtv.dtv_pallas(a, b, interpret=_INTERPRET)[:B]
+
+
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("use_kernel",))
+def verify_row_stats(logits: jnp.ndarray, cand: jnp.ndarray,
+                     use_kernel: bool = True):
+    """logits: (R, V); cand: (R,) -> (argmax, max, sumexp, cand_logit)."""
+    if not use_kernel:
+        return ref.verify_stats_ref(logits, cand)
+    R, V = logits.shape
+    x = _pad_to(_pad_to(logits, _verify.BLK_V, 1, _verify.NEG),
+                _verify.BLK_R, 0, _verify.NEG)
+    c = _pad_to(cand.astype(jnp.int32), _verify.BLK_R, 0, 0)
+    am, m, s, cl = _verify.verify_stats_pallas(x, c, interpret=_INTERPRET)
+    return am[:R], m[:R], s[:R], cl[:R]
+
+
+def greedy_accept_from_stats(cand, am, m, s, cl):
+    """O(R) epilogue: greedy accept mask + p(cand) from the fused stats."""
+    match = am == cand.astype(jnp.int32)
+    p_cand = jnp.exp(cl - m) / jnp.maximum(s, 1e-30)
+    return match, p_cand
+
+
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("use_kernel",))
+def masked_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            mask: jnp.ndarray,
+                            use_kernel: bool = True) -> jnp.ndarray:
+    """q: (B, H, D); k, v: (B, S, Hkv, D); mask: (B, S) -> (B, H, D)."""
+    if not use_kernel:
+        return ref.masked_decode_attention_ref(q, k, v, mask)
+    D = q.shape[-1]
+    scale = 1.0 / (D ** 0.5)     # scale by TRUE head dim before padding
+    qp = _pad_to(q, 128, 2, 0.0)
+    kp = _pad_to(k, 128, 3, 0.0)
+    vp = _pad_to(v, 128, 3, 0.0)
+    S = k.shape[1]
+    kp = _pad_to(kp, _attn.BLK_S, 1, 0.0)
+    vp = _pad_to(vp, _attn.BLK_S, 1, 0.0)
+    mp = _pad_to(mask, _attn.BLK_S, 1, False)
+    out = _attn.masked_decode_attention_pallas(
+        qp, kp, vp, mp, scale=scale, interpret=_INTERPRET)
+    return out[:, :, :D]

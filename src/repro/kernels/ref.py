@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# 1. DTV between softmax(a) and softmax(b) over a large vocab (paper Eq. 5)
+# ---------------------------------------------------------------------------
+def dtv_ref(a_logits: jnp.ndarray, b_logits: jnp.ndarray) -> jnp.ndarray:
+    """(B, V), (B, V) -> (B,) total variation distance."""
+    p = jax.nn.softmax(a_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.softmax(b_logits.astype(jnp.float32), axis=-1)
+    return 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
+
+
+def softmax_stats_ref(logits: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(R, V) -> (max (R,), sumexp (R,)) — the online-softmax statistics."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    s = jnp.sum(jnp.exp(x - m[:, None]), axis=-1)
+    return m, s
+
+
+# ---------------------------------------------------------------------------
+# 2. Verification row stats: fused argmax + logsumexp + candidate gather
+#    (the per-step hot spot of speculative verification: B·(W+1)·V work)
+# ---------------------------------------------------------------------------
+def verify_stats_ref(logits: jnp.ndarray, cand: jnp.ndarray):
+    """logits: (R, V); cand: (R,) int32 token per row.
+
+    Returns (argmax (R,), max (R,), sumexp (R,), cand_logit (R,)).
+    From these the acceptance rule is O(R): greedy accept = argmax == cand;
+    p(cand) = exp(cand_logit - max) / sumexp."""
+    x = logits.astype(jnp.float32)
+    am = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    m = jnp.max(x, axis=-1)
+    s = jnp.sum(jnp.exp(x - m[:, None]), axis=-1)
+    cl = jnp.take_along_axis(x, cand[:, None].astype(jnp.int32),
+                             axis=-1)[:, 0]
+    return am, m, s, cl
+
+
+# ---------------------------------------------------------------------------
+# 3. Masked single-token decode attention (paper Eq. 8 consumed in-kernel)
+# ---------------------------------------------------------------------------
+def masked_decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
+                                v: jnp.ndarray, mask: jnp.ndarray,
+                                scale: float | None = None) -> jnp.ndarray:
+    """q: (B, H, D); k, v: (B, S, Hkv, D); mask: (B, S) validity.
+
+    GQA: H = g * Hkv. Returns (B, H, D)."""
+    B, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg,
+                        k.astype(jnp.float32)) * scale
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :], scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=-1)[:, None, None, None], p, 0.0)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

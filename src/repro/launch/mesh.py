@@ -1,0 +1,24 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required because the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init,
+while tests/benches must see the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (per chip) — used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW_PER_LINK = 50e9         # B/s  (~per link)
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

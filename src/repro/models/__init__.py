@@ -1,0 +1,3 @@
+from .config import (EncDecConfig, InputShape, INPUT_SHAPES, MoEConfig,
+                     ModelConfig, SSMConfig, VLMConfig)
+from .model import LanguageModel

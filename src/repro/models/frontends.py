@@ -1,0 +1,65 @@
+"""Modality frontends — STUBS by assignment carve-out.
+
+[audio] whisper-tiny: the mel-spectrogram + conv feature extractor is not
+implemented; ``audio_encoder_stub`` yields precomputed frame embeddings of
+the correct shape (B, 1500, d_encoder) that the decoder cross-attends to.
+
+[vlm] qwen2-vl: the ViT/patch-merger is not implemented; ``vision_stub``
+yields projected patch embeddings (B, n_patch, d_model) that are prepended
+to the text embeddings, plus the M-RoPE (t, h, w) position grid for them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def audio_encoder_stub(cfg: ModelConfig, batch: int, key=None):
+    e = cfg.encdec
+    if key is None:
+        return jnp.zeros((batch, e.num_encoder_positions, e.d_encoder),
+                         cfg.dtype)
+    return (jax.random.normal(
+        key, (batch, e.num_encoder_positions, e.d_encoder)) * 0.02
+    ).astype(cfg.dtype)
+
+
+def audio_encoder_spec(cfg: ModelConfig, batch: int):
+    e = cfg.encdec
+    return jax.ShapeDtypeStruct(
+        (batch, e.num_encoder_positions, e.d_encoder), cfg.dtype)
+
+
+def vision_stub(cfg: ModelConfig, batch: int, key=None):
+    v = cfg.vlm
+    if key is None:
+        return jnp.zeros((batch, v.num_patch_tokens, cfg.d_model), cfg.dtype)
+    return (jax.random.normal(
+        key, (batch, v.num_patch_tokens, cfg.d_model)) * 0.02
+    ).astype(cfg.dtype)
+
+
+def vision_spec(cfg: ModelConfig, batch: int):
+    v = cfg.vlm
+    return jax.ShapeDtypeStruct(
+        (batch, v.num_patch_tokens, cfg.d_model), cfg.dtype)
+
+
+def mrope_patch_positions(cfg: ModelConfig, batch: int):
+    """(B, n_patch, 3) (t,h,w) grid for a square patch layout; dynamic
+    resolution reduces to choosing the grid — square stub here."""
+    v = cfg.vlm
+    n = v.num_patch_tokens
+    side = int(n ** 0.5)
+    hh, ww = jnp.meshgrid(jnp.arange(side), jnp.arange(side), indexing="ij")
+    grid = jnp.stack([jnp.zeros_like(hh), hh, ww], axis=-1).reshape(-1, 3)
+    grid = grid[:n]
+    return jnp.broadcast_to(grid[None], (batch, n, 3)).astype(jnp.int32)
+
+
+def mrope_text_positions(start, length, batch):
+    """Text tokens: all three streams share the scalar position."""
+    pos = start[:, None] + jnp.arange(length, dtype=jnp.int32)[None, :]
+    return jnp.repeat(pos[..., None], 3, axis=-1)

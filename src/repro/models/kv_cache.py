@@ -1,0 +1,224 @@
+"""ModelState: the paper's synchronized state abstraction (§4.4, Fig. 3).
+
+A ModelState bundles the physical per-layer caches with the *logical* buffers
+that make multi-level speculation consistent:
+
+  token_buf  (B, S) int32  — cache_tokens in the paper
+  pos_buf    (B, S) int32  — logical position stored in each physical slot
+  mask       (B, S) bool   — cache_mask: logical validity (paper Eq. 8)
+  length     (B,)   int32  — logical sequence length per row
+  write_ptr  ()     int32  — shared physical append pointer
+
+TPU adaptation of Eq. 9 (physical truncation): XLA needs static shapes, so
+instead of slicing tensors we *rewind the shared write pointer* to the end of
+the last physically-used slot that is still valid in any row.  This reclaims
+exactly the common suffix (r_min) with zero data movement — strictly cheaper
+than the paper's tensor copy.  Holes left by divergent per-row acceptance
+stay masked; ``defragment`` (beyond-paper) compacts them when fragmentation
+exceeds a threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ModelState:
+    token_buf: jnp.ndarray          # (B, S) int32
+    pos_buf: jnp.ndarray            # (B, S) int32
+    mask: jnp.ndarray               # (B, S) bool
+    length: jnp.ndarray             # (B,) int32
+    write_ptr: jnp.ndarray          # () int32
+    layers: Dict[str, Any]          # model-specific per-layer caches
+
+    @property
+    def batch(self) -> int:
+        return self.token_buf.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.token_buf.shape[1]
+
+
+def make_state(batch: int, max_len: int, layers: Dict[str, Any]) -> ModelState:
+    return ModelState(
+        token_buf=jnp.zeros((batch, max_len), jnp.int32),
+        pos_buf=jnp.zeros((batch, max_len), jnp.int32),
+        mask=jnp.zeros((batch, max_len), jnp.bool_),
+        length=jnp.zeros((batch,), jnp.int32),
+        write_ptr=jnp.zeros((), jnp.int32),
+        layers=layers,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical append (all rows write the same physical slots [P, P+T))
+# ---------------------------------------------------------------------------
+def append_tokens(state: ModelState, tokens: jnp.ndarray,
+                  valid: Optional[jnp.ndarray] = None):
+    """Append T tokens per row at shared physical slots; returns
+    (new_state, q_positions (B,T), slot_start ()).
+
+    ``valid`` (B, T) bool marks which appended entries are logically valid
+    (used when a batch row has already finished but the batch step still runs).
+    """
+    B, T = tokens.shape
+    P = state.write_ptr
+    if valid is None:
+        valid = jnp.ones((B, T), jnp.bool_)
+    q_pos = state.length[:, None] + jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+    q_pos = jnp.where(valid, q_pos, jnp.int32(2**30))  # invalid -> far future
+    upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(buf, new, P, axis=1)
+    new = dataclasses.replace(
+        state,
+        token_buf=upd(state.token_buf, tokens.astype(jnp.int32)),
+        pos_buf=upd(state.pos_buf, q_pos.astype(jnp.int32)),
+        mask=upd(state.mask, valid),
+        length=state.length + jnp.sum(valid, axis=1, dtype=jnp.int32),
+        write_ptr=P + T,
+    )
+    return new, q_pos, P
+
+
+# ---------------------------------------------------------------------------
+# Rollback: Eq. 8 (logical) + Eq. 9 TPU analogue (pointer rewind)
+# ---------------------------------------------------------------------------
+def logical_rollback(state: ModelState, r: jnp.ndarray) -> ModelState:
+    """Invalidate the last ``r[b]`` logically-valid entries of each row.
+
+    Pure mask arithmetic — no data movement (paper step 1, Eq. 8)."""
+    new_len = jnp.maximum(state.length - r.astype(jnp.int32), 0)
+    keep = state.pos_buf < new_len[:, None]
+    return dataclasses.replace(
+        state, mask=state.mask & keep, length=new_len)
+
+
+def physical_reclaim(state: ModelState) -> ModelState:
+    """Rewind the shared write pointer past the common invalid suffix.
+
+    TPU-native Eq. 9: reclaims the r_min common suffix without copying."""
+    S = state.capacity
+    slot_ids = jnp.arange(S, dtype=jnp.int32)[None, :]
+    # highest still-valid physical slot across the whole batch
+    last_valid = jnp.max(jnp.where(state.mask, slot_ids, -1))
+    new_ptr = jnp.minimum(state.write_ptr, last_valid + 1)
+    return dataclasses.replace(state, write_ptr=new_ptr.astype(jnp.int32))
+
+
+def rollback(state: ModelState, r: jnp.ndarray) -> ModelState:
+    """Full paper rollback: logical mask update then physical reclaim."""
+    return physical_reclaim(logical_rollback(state, r))
+
+
+def fragmentation(state: ModelState) -> jnp.ndarray:
+    """Fraction of physically-used slots that are logically dead."""
+    S = state.capacity
+    used = jnp.maximum(state.write_ptr, 1).astype(jnp.float32)
+    slot_ids = jnp.arange(S, dtype=jnp.int32)[None, :]
+    in_use = slot_ids < state.write_ptr
+    dead = jnp.sum((~state.mask) & in_use, axis=1).astype(jnp.float32)
+    return jnp.mean(dead) / used
+
+
+def defragment(state: ModelState) -> ModelState:
+    """Beyond-paper: compact every row's valid entries to the buffer front.
+
+    Gathers each row's valid slots (stable order by logical position) and
+    rewrites all buffers + every per-layer cache along the S axis.  O(S·cache)
+    data movement — call only when ``fragmentation`` exceeds a threshold.
+    """
+    B, S = state.token_buf.shape
+    big = jnp.int32(2**30)
+    sort_key = jnp.where(state.mask, state.pos_buf, big)
+    order = jnp.argsort(sort_key, axis=1)                       # (B, S)
+    take = lambda buf: jnp.take_along_axis(buf, order, axis=1)
+    n_valid = jnp.sum(state.mask, axis=1).astype(jnp.int32)
+    new_mask = jnp.arange(S, dtype=jnp.int32)[None, :] < n_valid[:, None]
+
+    def gather_cache(x):
+        # per-layer caches are (L, B, S, ...): gather along axis=2
+        if x.ndim >= 3 and x.shape[1] == B and x.shape[2] == S:
+            idx = order.reshape((1, B, S) + (1,) * (x.ndim - 3))
+            return jnp.take_along_axis(x, idx, axis=2)
+        return x
+
+    return dataclasses.replace(
+        state,
+        token_buf=take(state.token_buf),
+        pos_buf=jnp.where(new_mask, take(state.pos_buf), 0),
+        mask=new_mask,
+        write_ptr=jnp.max(n_valid),
+        layers=jax.tree.map(gather_cache, state.layers),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention KV cache helpers (stacked layers: (L, B, S, Hkv, hd))
+# ---------------------------------------------------------------------------
+def make_attn_cache(num_layers, batch, max_len, num_kv_heads, head_dim,
+                    dtype, quant: bool = False):
+    shape = (num_layers, batch, max_len, num_kv_heads, head_dim)
+    if quant:
+        # §Perf G2: int8 cache + per-(token, head) scales — halves the
+        # dominant serving memory/traffic; dequant fuses into the dots
+        sshape = (num_layers, batch, max_len, num_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+                "v_scale": jnp.zeros(sshape, jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_cache_axes(prefix=(), quant: bool = False):
+    ax = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    d = {"k": prefix + ax, "v": prefix + ax}
+    if quant:
+        sx = ("layers", "batch", "seq", "kv_heads")
+        d["k_scale"] = prefix + sx
+        d["v_scale"] = prefix + sx
+    return d
+
+
+def kv_quantize(x: jnp.ndarray):
+    """(B, T, Hkv, hd) -> (int8 codes, (B, T, Hkv) bf16 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.bfloat16)
+
+
+def kv_dequantize(codes: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (codes.astype(dtype) * scale[..., None].astype(dtype))
+
+
+def write_kv(cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+             k_new: jnp.ndarray, v_new: jnp.ndarray, slot_start):
+    """Write (B,T,Hkv,hd) into a single layer's (B,S,Hkv,hd) cache views."""
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot_start, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot_start, axis=1)
+    return ck, cv
+
+
+# ---------------------------------------------------------------------------
+# SSM snapshot buffers (rollback support for recurrent archs — DESIGN §5)
+# ---------------------------------------------------------------------------
+# Recurrent state has no per-position cache; rollback restores a snapshot.
+# Snapshots are only materialized in the speculative serving path (small
+# models); the dry-run decode step carries ``snaps=None``.
+def snap_write(snaps: jnp.ndarray, current: jnp.ndarray, pos: jnp.ndarray):
+    """snaps: (K, ...) ring buffer; store ``current`` at slot pos % K."""
+    K = snaps.shape[0]
+    return jax.lax.dynamic_update_index_in_dim(
+        snaps, current, pos % K, axis=0)
+
+
+def snap_read(snaps: jnp.ndarray, pos: jnp.ndarray):
+    K = snaps.shape[0]
+    return jax.lax.dynamic_index_in_dim(snaps, pos % K, axis=0, keepdims=False)

@@ -1,0 +1,282 @@
+"""Core neural layers shared by every architecture family.
+
+All layers are pure functions over parameter pytrees.  Every ``init_*``
+returns ``(params, axes)`` where ``axes`` mirrors ``params`` with tuples of
+*logical axis names* per dimension — consumed by ``repro.sharding`` to build
+``NamedSharding``s with divisibility fallback.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis vocabulary (see repro/sharding.py for the mesh mapping rules):
+#   vocab, embed, heads, kv_heads, head_dim, mlp, experts, expert_mlp,
+#   ssm_inner, ssm_state, conv, enc_embed, layers, batch, seq
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_linear(key, in_dim, out_dim, in_axis, out_axis, dtype,
+                bias: bool = False, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": _normal(key, (in_dim, out_dim), dtype, scale)}
+    a = {"w": (in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        a["b"] = (out_axis,)
+    return p, a
+
+
+def linear(p, x):
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d, dtype):
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: float):
+    if cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, T, H, D); positions: (B, T) int32 logical positions."""
+    freqs = _rope_freqs(x.shape[-1], theta)                     # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # (B,T,D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, int, int], theta: float) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, T, H, D); positions3: (B, T, 3) — (t, h, w) position streams.
+    ``sections`` partitions the D/2 frequency slots among the 3 streams.
+    For pure text the 3 streams are identical -> reduces to standard RoPE.
+    """
+    assert sum(sections) == x.shape[-1] // 2, (sections, x.shape)
+    freqs = _rope_freqs(x.shape[-1], theta)                     # (D/2,)
+    # stream id per frequency slot
+    sec_ids = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                          # (B,T,3)
+        jnp.broadcast_to(sec_ids[None, None, :],
+                         positions3.shape[:2] + sec_ids.shape), axis=-1)
+    ang = pos * freqs                                            # (B,T,D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA, validity-mask aware — paper Eq. 8)
+# ---------------------------------------------------------------------------
+def build_attention_mask(cache_mask: jnp.ndarray,
+                         kv_positions: jnp.ndarray,
+                         q_positions: jnp.ndarray,
+                         window: int = 0) -> jnp.ndarray:
+    """The paper's Eq. 8: logical validity mask -> attention mask.
+
+    cache_mask:   (B, S) bool — logical validity of each physical KV slot
+    kv_positions: (B, S) int32 — logical position stored in each slot
+    q_positions:  (B, T) int32 — logical positions of the query tokens
+    window:       sliding-window size (0 = full)
+
+    Returns (B, T, S) bool.  Invalid slots (mask=0) are ignored even though
+    their data physically exists — this is what makes logical rollback free.
+    """
+    valid = cache_mask[:, None, :]                                    # (B,1,S)
+    causal = kv_positions[:, None, :] <= q_positions[:, :, None]      # (B,T,S)
+    m = valid & causal
+    if window > 0:
+        m = m & (kv_positions[:, None, :] > q_positions[:, :, None] - window)
+    return m
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  mask: jnp.ndarray, attn_softcap: float = 0.0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q: (B,T,H,D); k,v: (B,S,Hkv,D); mask: (B,T,S) -> (B,T,H,D)."""
+    B, T, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, T, Hkv, g, D)
+    # §Perf G1 (EXPERIMENTS.md pair 3): mixed-precision dots with fp32
+    # accumulation instead of materializing fp32 casts of the KV cache —
+    # the cast alone tripled decode HBM traffic (read bf16 + write f32 +
+    # read f32) on a tensor that dominates serving memory.
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, attn_softcap)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (fully masked) -> zeros, not NaN
+    any_valid = jnp.any(mask, axis=-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, H, D).astype(q.dtype)
+
+
+def gqa_attention_quant(q: jnp.ndarray,
+                        k_q: jnp.ndarray, k_scale: jnp.ndarray,
+                        v_q: jnp.ndarray, v_scale: jnp.ndarray,
+                        mask: jnp.ndarray, attn_softcap: float = 0.0,
+                        scale: float | None = None) -> jnp.ndarray:
+    """§Perf G2b: int8-KV attention WITHOUT dequant materialization.
+
+    The per-(token, head) scales are constant over the contraction dims, so
+    they factor OUT of both dots:
+      QK: scores = (q_i8 · k_i8)[int32] · qs_t · ks_s
+      PV: out    = Σ_s (p_s · vs_s) · v_i8[s]   (probs absorbed the scale)
+    The dots run int8×int8 → int32 (native MXU int8 throughput); only the
+    tiny (B,S,Hkv) scale vectors and the int8 cache touch HBM.
+    q: (B,T,H,D) float; k_q/v_q: (B,S,Hkv,D) int8; *_scale: (B,S,Hkv).
+    """
+    B, T, H, D = q.shape
+    Hkv = k_q.shape[2]
+    g = H // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(D)
+    # quantize q per (b, t, h)
+    qg = q.reshape(B, T, Hkv, g, D)
+    q_amax = jnp.max(jnp.abs(qg.astype(jnp.float32)), axis=-1)
+    q_s = jnp.maximum(q_amax / 127.0, 1e-8)
+    q_i8 = jnp.clip(jnp.round(qg.astype(jnp.float32) / q_s[..., None]),
+                    -127, 127).astype(jnp.int8)
+    scores_i = jnp.einsum("bthgd,bshd->bhgts", q_i8, k_q,
+                          preferred_element_type=jnp.int32)
+    scores = (scores_i.astype(jnp.float32)
+              * jnp.moveaxis(q_s, (1, 2, 3), (3, 1, 2))[..., None]
+              * k_scale.astype(jnp.float32).transpose(0, 2, 1)[
+                  :, :, None, None, :]) * sc
+    scores = softcap(scores, attn_softcap)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    any_valid = jnp.any(mask, axis=-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    # absorb v scales into probs, quantize probs (max<=1 -> fixed scale)
+    p_scaled = probs * v_scale.astype(jnp.float32).transpose(0, 2, 1)[
+        :, :, None, None, :]
+    p_amax = jnp.maximum(jnp.max(p_scaled, axis=-1), 1e-8)   # (b,h,g,t)
+    p_i8 = jnp.clip(jnp.round(p_scaled / p_amax[..., None] * 127.0),
+                    0, 127).astype(jnp.int8)
+    out_i = jnp.einsum("bhgts,bshd->bthgd", p_i8, v_q,
+                       preferred_element_type=jnp.int32)
+    out = (out_i.astype(jnp.float32)
+           * jnp.moveaxis(p_amax, (1, 2, 3), (2, 3, 1))[..., None] / 127.0)
+    return out.reshape(B, T, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_swiglu(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["gate"], a["gate"] = init_linear(k1, d_model, d_ff, "embed", "mlp", dtype)
+    p["up"], a["up"] = init_linear(k2, d_model, d_ff, "embed", "mlp", dtype)
+    p["down"], a["down"] = init_linear(k3, d_ff, d_model, "mlp", "embed", dtype)
+    return p, a
+
+
+def swiglu(p, x):
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype, bias=True):
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["up"], a["up"] = init_linear(k1, d_model, d_ff, "embed", "mlp", dtype, bias=bias)
+    p["down"], a["down"] = init_linear(k2, d_ff, d_model, "mlp", "embed", dtype, bias=bias)
+    return p, a
+
+
+def gelu_mlp(p, x):
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Attention block params
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, dtype, kv_input_dim: Optional[int] = None):
+    """Standard GQA projections. kv_input_dim overrides K/V input width
+    (whisper cross-attention reads encoder states)."""
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kv_in = kv_input_dim or d
+    kq, kk, kv_, ko = jax.random.split(key, 4)
+    kv_axis = "enc_embed" if kv_input_dim else "embed"
+    p, a = {}, {}
+    p["q"], a["q"] = init_linear(kq, d, H * hd, "embed", "heads", dtype, bias=cfg.qkv_bias)
+    p["k"], a["k"] = init_linear(kk, kv_in, Hkv * hd, kv_axis, "kv_heads", dtype, bias=cfg.qkv_bias)
+    p["v"], a["v"] = init_linear(kv_, kv_in, Hkv * hd, kv_axis, "kv_heads", dtype, bias=cfg.qkv_bias)
+    p["o"], a["o"] = init_linear(ko, H * hd, d, "heads", "embed", dtype)
+    return p, a
+
+
+def attention_qkv(p, x, cfg, kv_x=None):
+    """Project to q,k,v. x: (B,T,d). Returns q:(B,T,H,hd) k,v:(B,Tk,Hkv,hd)."""
+    B, T, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    Tk = kv_x.shape[1]
+    q = linear(p["q"], x).reshape(B, T, cfg.num_heads, cfg.head_dim)
+    k = linear(p["k"], kv_x).reshape(B, Tk, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(p["v"], kv_x).reshape(B, Tk, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attention_out(p, o):
+    B, T, H, D = o.shape
+    return linear(p["o"], o.reshape(B, T, H * D))

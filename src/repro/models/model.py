@@ -1,0 +1,139 @@
+"""LanguageModel facade: one uniform interface over all architecture
+families, consumed by the SpecRouter core, the trainer, the serving engine,
+and the dry-run launcher.
+
+    lm = LanguageModel(cfg)
+    params, axes = lm.init(key)
+    state, state_axes = lm.make_state(batch, max_len, with_snaps=...)
+    logits, state = lm.prefill(params, state, tokens, **extras)
+    logits, state = lm.decode(params, state, tokens, valid=..., **extras)
+    state = lm.rollback(state, r)
+    logits[, aux] = lm.train_logits(params, tokens, **extras)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import frontends, hybrid, kv_cache as kvc, moe, ssm, transformer as tf
+from .config import ModelConfig
+
+_FAMILY = {
+    "dense": tf, "audio": tf, "vlm": tf,
+    "moe": moe, "ssm": ssm, "hybrid": hybrid,
+}
+
+
+class LanguageModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.mod = _FAMILY[cfg.arch_type]
+
+    # ---- params ------------------------------------------------------
+    def init(self, key):
+        return self.mod.init(key, self.cfg)
+
+    def param_axes(self):
+        return self.mod.param_axes(self.cfg)
+
+    # ---- abstract (no-allocation) views for the dry-run ---------------
+    def abstract_params(self):
+        return jax.eval_shape(lambda k: self.init(k)[0],
+                              jax.random.PRNGKey(0))
+
+    def abstract_state(self, batch: int, max_len: int):
+        """(ShapeDtypeStruct state, axes) without allocating the buffers."""
+        state = jax.eval_shape(lambda: self.make_state(batch, max_len)[0])
+        axes = self.make_state(1, 8)[1]   # axes structure is size-free
+        return state, axes
+
+    # ---- state -------------------------------------------------------
+    def make_state(self, batch: int, max_len: int, with_snaps: bool = False):
+        cfg = self.cfg
+        if self.mod in (ssm, hybrid):
+            layers, axes = self.mod.make_cache(cfg, batch, max_len,
+                                               with_snaps=with_snaps)
+        else:
+            layers, axes = self.mod.make_cache(cfg, batch, max_len)
+        state = kvc.make_state(batch, max_len, layers)
+        state_axes = kvc.ModelState(
+            token_buf=("batch", "seq"), pos_buf=("batch", "seq"),
+            mask=("batch", "seq"), length=("batch",), write_ptr=(),
+            layers=axes)
+        return state, state_axes
+
+    # ---- extras handling ----------------------------------------------
+    def _prep(self, params, state, tokens, extras):
+        """Returns (kwargs for forward_cached, state possibly updated)."""
+        cfg = self.cfg
+        kw: Dict[str, Any] = {}
+        if cfg.arch_type == "audio":
+            enc = extras.get("enc_states")
+            if enc is not None and state is not None:
+                xk, xv = tf.precompute_cross_kv(params, cfg, enc)
+                state = dataclasses.replace(
+                    state, layers={**state.layers, "cross_k": xk,
+                                   "cross_v": xv})
+        if cfg.arch_type == "vlm" and extras.get("mrope_positions") is not None:
+            kw["mrope_positions"] = extras["mrope_positions"]
+        if extras.get("input_embeds") is not None:
+            kw["input_embeds"] = extras["input_embeds"]
+        return kw, state
+
+    # ---- inference -----------------------------------------------------
+    def prefill(self, params, state, tokens, valid=None, logits_mode="last",
+                **extras):
+        kw, state = self._prep(params, state, tokens, extras)
+        return self.mod.forward_cached(
+            params, self.cfg, state, tokens, valid=valid,
+            logits_mode=logits_mode, **kw)
+
+    def decode(self, params, state, tokens, valid=None, logits_mode="all",
+               **extras):
+        kw, state = self._prep(params, state, tokens, extras)
+        return self.mod.forward_cached(
+            params, self.cfg, state, tokens, valid=valid,
+            logits_mode=logits_mode, **kw)
+
+    # ---- rollback (paper §4.4; SSM snapshot adaptation DESIGN §5) ------
+    def rollback(self, state: kvc.ModelState, r: jnp.ndarray):
+        if self.cfg.arch_type == "ssm":
+            state = ssm.rollback_ssm(state, r)
+        elif self.cfg.arch_type == "hybrid" and "snaps" in state.layers:
+            state = hybrid.rollback_hybrid(state, r)
+        return kvc.rollback(state, r)
+
+    # ---- training ------------------------------------------------------
+    def train_logits(self, params, tokens, remat=True, **extras):
+        """Dense/ssm/hybrid: logits. MoE: (logits, aux_loss)."""
+        cfg = self.cfg
+        kw: Dict[str, Any] = {}
+        if cfg.arch_type == "audio":
+            kw["enc_states"] = extras.get("enc_states")
+        if cfg.arch_type == "vlm":
+            if extras.get("mrope_positions") is not None:
+                kw["mrope_positions"] = extras["mrope_positions"]
+            if extras.get("input_embeds") is not None:
+                kw["input_embeds"] = extras["input_embeds"]
+        return self.mod.forward_train(params, cfg, tokens, remat=remat, **kw)
+
+    def has_aux_loss(self) -> bool:
+        return self.cfg.arch_type == "moe"
+
+    # ---- convenience ---------------------------------------------------
+    def extras_for(self, batch: int, key=None) -> Dict[str, Any]:
+        """Concrete stub frontend inputs for smoke tests / serving."""
+        cfg = self.cfg
+        if cfg.arch_type == "audio":
+            return {"enc_states": frontends.audio_encoder_stub(cfg, batch, key)}
+        return {}
+
+    def extras_specs(self, batch: int) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the dry-run."""
+        cfg = self.cfg
+        if cfg.arch_type == "audio":
+            return {"enc_states": frontends.audio_encoder_spec(cfg, batch)}
+        return {}

@@ -1,0 +1,373 @@
+"""Dense decoder transformer.
+
+Covers: gemma3 (local:global SWA interleave, qk-norm, sandwich norms,
+logit softcap), qwen1.5 (QKV bias), minitron, granite (MQA), whisper decoder
+(cross-attention + learned positions), qwen2-vl (M-RoPE, patch embeds).
+
+Layers are stacked along a leading L axis and executed with ``lax.scan``
+(compile-time O(1) in depth — essential for 62-layer dry-runs on this host).
+Per-layer heterogeneity (local vs global attention, rope theta) rides along
+as scanned flag arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kv_cache as kvc
+from . import layers as nn
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer_params(key, cfg: ModelConfig):
+    dt = cfg.dtype
+    ks = jax.random.split(key, 8)
+    p = {}
+    p["ln1"], _ = nn.init_rmsnorm(cfg.d_model, dt)
+    p["attn"], _ = nn.init_attention(ks[0], cfg, dt)
+    p["ln2"], _ = nn.init_rmsnorm(cfg.d_model, dt)
+    p["mlp"], _ = nn.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+    if cfg.sandwich_norm:
+        p["post_attn_ln"], _ = nn.init_rmsnorm(cfg.d_model, dt)
+        p["post_mlp_ln"], _ = nn.init_rmsnorm(cfg.d_model, dt)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((cfg.head_dim,), dt)}
+        p["k_norm"] = {"scale": jnp.ones((cfg.head_dim,), dt)}
+    if cfg.encdec is not None:
+        p["ln_cross"], _ = nn.init_rmsnorm(cfg.d_model, dt)
+        p["cross"], _ = nn.init_attention(
+            ks[2], cfg, dt, kv_input_dim=cfg.encdec.d_encoder)
+    return p
+
+
+def _layer_axes(cfg: ModelConfig):
+    L = ("layers",)
+    ax: Dict[str, Any] = {
+        "ln1": {"scale": L + ("embed",)},
+        "ln2": {"scale": L + ("embed",)},
+        "attn": {
+            "q": {"w": L + ("embed", "heads")},
+            "k": {"w": L + ("embed", "kv_heads")},
+            "v": {"w": L + ("embed", "kv_heads")},
+            "o": {"w": L + ("heads", "embed")},
+        },
+        "mlp": {
+            "gate": {"w": L + ("embed", "mlp")},
+            "up": {"w": L + ("embed", "mlp")},
+            "down": {"w": L + ("mlp", "embed")},
+        },
+    }
+    if cfg.qkv_bias:
+        for n in ("q", "k", "v"):
+            tgt = "heads" if n == "q" else "kv_heads"
+            ax["attn"][n]["b"] = L + (tgt,)
+    if cfg.sandwich_norm:
+        ax["post_attn_ln"] = {"scale": L + ("embed",)}
+        ax["post_mlp_ln"] = {"scale": L + ("embed",)}
+    if cfg.qk_norm:
+        ax["q_norm"] = {"scale": L + ("head_dim",)}
+        ax["k_norm"] = {"scale": L + ("head_dim",)}
+    if cfg.encdec is not None:
+        ax["ln_cross"] = {"scale": L + ("embed",)}
+        ax["cross"] = {
+            "q": {"w": L + ("embed", "heads")},
+            "k": {"w": L + ("enc_embed", "kv_heads")},
+            "v": {"w": L + ("enc_embed", "kv_heads")},
+            "o": {"w": L + ("heads", "embed")},
+        }
+    return ax
+
+
+def param_axes(cfg: ModelConfig):
+    axes: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "blocks": _layer_axes(cfg),
+        "final_norm": {"scale": ("embed",)},
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = {"w": ("embed", "vocab")}
+    if cfg.learned_positions:
+        axes["pos_embed"] = ("seq", "embed")
+    return axes
+
+
+def init(key, cfg: ModelConfig):
+    dt = cfg.dtype
+    k_emb, k_layers, k_head, k_pos = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dt),
+        "blocks": jax.vmap(partial(_init_layer_params, cfg=cfg))(layer_keys),
+        "final_norm": nn.init_rmsnorm(cfg.d_model, dt)[0],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"], _ = nn.init_linear(
+            k_head, cfg.d_model, cfg.vocab_size, "embed", "vocab", dt)
+    if cfg.learned_positions:
+        params["pos_embed"] = (jax.random.normal(
+            k_pos, (cfg.max_position, cfg.d_model)) * 0.02).astype(dt)
+    return params, param_axes(cfg)
+
+
+def layer_flags(cfg: ModelConfig):
+    """Per-layer scanned metadata: (is_global (L,), rope_theta (L,))."""
+    L = cfg.num_layers
+    is_global = jnp.array(
+        [cfg.is_global_layer(i) for i in range(L)], jnp.bool_)
+    theta_g = cfg.rope_theta_global or cfg.rope_theta
+    thetas = jnp.where(is_global, theta_g, cfg.rope_theta).astype(jnp.float32)
+    return is_global, thetas
+
+
+# ---------------------------------------------------------------------------
+# Shared block computation
+# ---------------------------------------------------------------------------
+def _embed(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    x = nn.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"])
+    else:
+        logits = nn.linear(params["lm_head"], x)
+    return nn.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def _qk_normed(pl, cfg, q, k):
+    if cfg.qk_norm:
+        q = nn.rmsnorm(pl["q_norm"], q, cfg.rms_eps)
+        k = nn.rmsnorm(pl["k_norm"], k, cfg.rms_eps)
+    return q, k
+
+
+def _block(pl, cfg: ModelConfig, x, *, k_cached, v_cached, mask,
+           q_pos3, theta, cross_kv=None, write_slot=None, kv_scales=None):
+    """One transformer block.
+
+    k_cached/v_cached: (B, S, Hkv, hd) — full physical cache view for this
+    layer (already containing the new tokens' K/V written by caller? No —
+    we compute and write here when write_slot is given; for trainer mode
+    k_cached is None and attention is over the block itself).
+    kv_scales: (k_scale, v_scale) (B, S, Hkv) when cfg.kv_quant.
+    """
+    h = nn.rmsnorm(pl["ln1"], x, cfg.rms_eps)
+    q, k_new, v_new = nn.attention_qkv(pl["attn"], h, cfg)
+    q, k_new = _qk_normed(pl, cfg, q, k_new)
+    if cfg.vlm is not None:
+        q = nn.apply_mrope(q, q_pos3, cfg.vlm.mrope_sections, theta)
+        k_new = nn.apply_mrope(k_new, q_pos3, cfg.vlm.mrope_sections, theta)
+    else:
+        qp = q_pos3[..., 0]
+        q = _rope_traced(q, qp, theta, cfg.head_dim)
+        k_new = _rope_traced(k_new, qp, theta, cfg.head_dim)
+
+    if k_cached is not None:
+        if cfg.kv_quant:
+            kq, ksc = kvc.kv_quantize(k_new)
+            vq, vsc = kvc.kv_quantize(v_new)
+            ck, cv = kvc.write_kv(k_cached, v_cached, kq, vq, write_slot)
+            upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
+                buf, new.astype(buf.dtype), write_slot, axis=1)
+            cks = upd(kv_scales[0], ksc)
+            cvs = upd(kv_scales[1], vsc)
+            attn_out = nn.gqa_attention_quant(
+                q, ck, cks, cv, cvs, mask, cfg.attn_softcap)
+            new_cache = (ck, cv, cks, cvs)
+        else:
+            ck, cv = kvc.write_kv(k_cached, v_cached, k_new, v_new,
+                                  write_slot)
+            attn_out = nn.gqa_attention(q, ck, cv, mask, cfg.attn_softcap)
+            new_cache = (ck, cv)
+    else:
+        attn_out = nn.gqa_attention(q, k_new, v_new, mask, cfg.attn_softcap)
+        new_cache = None
+    a = nn.attention_out(pl["attn"], attn_out)
+    if cfg.sandwich_norm:
+        a = nn.rmsnorm(pl["post_attn_ln"], a, cfg.rms_eps)
+    x = x + a
+
+    if cross_kv is not None:  # whisper decoder cross-attention
+        hc = nn.rmsnorm(pl["ln_cross"], x, cfg.rms_eps)
+        B, T, _ = hc.shape
+        qc = nn.linear(pl["cross"]["q"], hc).reshape(
+            B, T, cfg.num_heads, cfg.head_dim)
+        ck_, cv_ = cross_kv  # (B, S_enc, Hkv, hd) — precomputed at prefill
+        cm = jnp.ones((B, T, ck_.shape[1]), jnp.bool_)
+        co = nn.gqa_attention(qc, ck_, cv_, cm)
+        x = x + nn.attention_out(pl["cross"], co)
+
+    h2 = nn.rmsnorm(pl["ln2"], x, cfg.rms_eps)
+    m = nn.swiglu(pl["mlp"], h2)
+    if cfg.sandwich_norm:
+        m = nn.rmsnorm(pl["post_mlp_ln"], m, cfg.rms_eps)
+    return x + m, new_cache
+
+
+def _rope_traced(x, positions, theta, head_dim):
+    """RoPE with a *traced* theta (per-layer scanned scalar)."""
+    half = head_dim // 2
+    exponent = jnp.arange(half, dtype=jnp.float32) / half
+    freqs = 1.0 / (theta ** exponent)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cached forward (prefill + decode): scan over layers
+# ---------------------------------------------------------------------------
+def make_cache(cfg: ModelConfig, batch: int, max_len: int):
+    layers = kvc.make_attn_cache(cfg.num_layers, batch, max_len,
+                                 cfg.num_kv_heads, cfg.head_dim, cfg.dtype,
+                                 quant=cfg.kv_quant)
+    axes = kvc.attn_cache_axes(quant=cfg.kv_quant)
+    if cfg.encdec is not None:
+        e = cfg.encdec
+        shape = (cfg.num_layers, batch, e.num_encoder_positions,
+                 cfg.num_kv_heads, cfg.head_dim)
+        layers["cross_k"] = jnp.zeros(shape, cfg.dtype)
+        layers["cross_v"] = jnp.zeros(shape, cfg.dtype)
+        axes["cross_k"] = ("layers", "batch", "enc_seq", "kv_heads", "head_dim")
+        axes["cross_v"] = ("layers", "batch", "enc_seq", "kv_heads", "head_dim")
+    return layers, axes
+
+
+def precompute_cross_kv(params, cfg: ModelConfig, enc_states):
+    """Whisper: compute per-layer cross K/V from encoder output once."""
+    def one(pl):
+        B, S, _ = enc_states.shape
+        k = nn.linear(pl["cross"]["k"], enc_states).reshape(
+            B, S, cfg.num_kv_heads, cfg.head_dim)
+        v = nn.linear(pl["cross"]["v"], enc_states).reshape(
+            B, S, cfg.num_kv_heads, cfg.head_dim)
+        return k, v
+    return jax.vmap(one)(params["blocks"])  # over stacked L axis
+
+
+def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
+                   tokens: jnp.ndarray,
+                   valid: Optional[jnp.ndarray] = None,
+                   input_embeds: Optional[jnp.ndarray] = None,
+                   mrope_positions: Optional[jnp.ndarray] = None,
+                   logits_mode: str = "all"):
+    """Append T tokens, run all layers, return (logits, new_state).
+
+    logits_mode: 'all' -> (B,T,V); 'last' -> (B,V) at each row's last valid.
+    """
+    state, q_pos, slot = kvc.append_tokens(state, tokens, valid)
+    B, T = tokens.shape
+    x = input_embeds if input_embeds is not None else _embed(params, cfg, tokens)
+    if cfg.learned_positions:
+        safe = jnp.clip(q_pos, 0, cfg.max_position - 1)
+        x = x + params["pos_embed"][safe]
+
+    kv_pos = state.pos_buf
+    m_full = nn.build_attention_mask(state.mask, kv_pos, q_pos, window=0)
+    m_win = (nn.build_attention_mask(state.mask, kv_pos, q_pos,
+                                     window=cfg.sliding_window)
+             if cfg.sliding_window > 0 else m_full)
+    if mrope_positions is None:
+        q_pos3 = jnp.repeat(q_pos[..., None], 3, axis=-1)
+    else:
+        q_pos3 = mrope_positions
+
+    is_global, thetas = layer_flags(cfg)
+    has_cross = cfg.encdec is not None
+    xs = {"pl": params["blocks"], "ck": state.layers["k"],
+          "cv": state.layers["v"], "g": is_global, "theta": thetas}
+    if cfg.kv_quant:
+        xs["cks"] = state.layers["k_scale"]
+        xs["cvs"] = state.layers["v_scale"]
+    if has_cross:
+        xs["xk"] = state.layers["cross_k"]
+        xs["xv"] = state.layers["cross_v"]
+
+    def body(x, s):
+        mask = jnp.where(s["g"], m_full, m_win) if cfg.sliding_window > 0 \
+            else m_full
+        cross = (s["xk"], s["xv"]) if has_cross else None
+        scales = (s["cks"], s["cvs"]) if cfg.kv_quant else None
+        x, caches = _block(
+            s["pl"], cfg, x, k_cached=s["ck"], v_cached=s["cv"], mask=mask,
+            q_pos3=q_pos3, theta=s["theta"], cross_kv=cross,
+            write_slot=slot, kv_scales=scales)
+        out = {"k": caches[0], "v": caches[1]}
+        if cfg.kv_quant:
+            out["k_scale"], out["v_scale"] = caches[2], caches[3]
+        return x, out
+
+    x, new_kv = jax.lax.scan(body, x, xs)
+    state = dataclasses.replace(state, layers={**state.layers, **new_kv})
+
+    if logits_mode == "none":
+        return None, state
+    if logits_mode == "last":
+        if valid is None:
+            x_last = x[:, -1]
+        else:
+            idx = jnp.maximum(jnp.sum(valid, axis=1) - 1, 0)
+            x_last = jnp.take_along_axis(
+                x, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        return _unembed(params, cfg, x_last), state
+    return _unembed(params, cfg, x), state
+
+
+# ---------------------------------------------------------------------------
+# Trainer forward (no cache, full causal)
+# ---------------------------------------------------------------------------
+def forward_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  input_embeds: Optional[jnp.ndarray] = None,
+                  mrope_positions: Optional[jnp.ndarray] = None,
+                  enc_states: Optional[jnp.ndarray] = None,
+                  remat: bool = True):
+    B, S = tokens.shape
+    x = input_embeds if input_embeds is not None else _embed(params, cfg, tokens)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    if cfg.learned_positions:
+        x = x + params["pos_embed"][pos]
+    ar = jnp.arange(S, dtype=jnp.int32)
+    causal = ar[None, :, None] >= ar[None, None, :]
+    m_full = jnp.broadcast_to(causal, (B, S, S))
+    if cfg.sliding_window > 0:
+        m_win = m_full & (ar[None, None, :] > ar[None, :, None] - cfg.sliding_window)
+    else:
+        m_win = m_full
+    q_pos3 = (jnp.repeat(pos[..., None], 3, axis=-1)
+              if mrope_positions is None else mrope_positions)
+    is_global, thetas = layer_flags(cfg)
+    has_cross = cfg.encdec is not None
+    cross_kv_all = (precompute_cross_kv(params, cfg, enc_states)
+                    if has_cross else None)
+
+    xs = {"pl": params["blocks"], "g": is_global, "theta": thetas}
+    if has_cross:
+        xs["xk"], xs["xv"] = cross_kv_all
+
+    def body(x, s):
+        mask = jnp.where(s["g"], m_full, m_win) if cfg.sliding_window > 0 \
+            else m_full
+        cross = (s["xk"], s["xv"]) if has_cross else None
+        x, _ = _block(s["pl"], cfg, x, k_cached=None, v_cached=None,
+                      mask=mask, q_pos3=q_pos3, theta=s["theta"],
+                      cross_kv=cross)
+        return x, None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, _ = jax.lax.scan(fn, x, xs)
+    return _unembed(params, cfg, x)

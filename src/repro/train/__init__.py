@@ -1,0 +1,1 @@
+from .step import TrainState, init_train_state, loss_fn, make_train_step

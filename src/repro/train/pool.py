@@ -1,0 +1,77 @@
+"""Train the demo Llama-family pool on the synthetic corpus and cache the
+weights — the substrate for every serving benchmark/example (paper §5:
+same-tokenizer model family with a real capability gradient)."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import checkpoint as ckpt
+from ..configs.llama_pool import demo_pool
+from ..core import ModelPool
+from ..data import CorpusConfig, SyntheticCorpus
+from ..models.model import LanguageModel
+from .step import TrainState, init_train_state, make_train_step
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../checkpoints/demo_pool")
+
+
+def train_one(cfg, corpus: SyntheticCorpus, steps: int, batch: int = 16,
+              seq: int = 96, lr: float = 1e-3, log_every: int = 100,
+              seed: int = 0, verbose: bool = True):
+    lm = LanguageModel(cfg)
+    ts = init_train_state(lm, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(lm, base_lr=lr, warmup=20,
+                                      total=steps, remat=False))
+    it = corpus.batches(batch, seq, seed=seed + 1)
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        tokens = jnp.asarray(next(it))
+        ts, metrics = step_fn(ts, tokens)
+        if s % log_every == 0 or s == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if verbose:
+                print(f"  [{cfg.name}] step {s:4d} loss {loss:.4f} "
+                      f"({time.time()-t0:.0f}s)")
+    return ts.params, losses
+
+
+def build_trained_pool(steps: int = 400, ckpt_dir: str = DEFAULT_DIR,
+                       vocab_size: int = 512, force: bool = False,
+                       verbose: bool = True
+                       ) -> Tuple[ModelPool, SyntheticCorpus]:
+    """Returns (ModelPool with trained demo models, corpus). Cached on disk."""
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=vocab_size))
+    pool = ModelPool()
+    for i, cfg in enumerate(demo_pool(vocab_size)):
+        lm = LanguageModel(cfg)
+        path = os.path.join(ckpt_dir, cfg.name)
+        params0, axes = lm.init(jax.random.PRNGKey(42 + i))
+        loaded = False
+        if ckpt.exists(path) and not force:
+            try:
+                params = jax.tree.map(jnp.asarray, ckpt.load(path, params0))
+                loaded = True
+                if verbose:
+                    print(f"[pool] loaded {cfg.name} from {path}")
+            except AssertionError:
+                if verbose:
+                    print(f"[pool] stale checkpoint for {cfg.name}; "
+                          "retraining")
+        if not loaded:
+            if verbose:
+                print(f"[pool] training {cfg.name} ({steps} steps)…")
+            params, _ = train_one(cfg, corpus, steps, seed=7 * i,
+                                  verbose=verbose)
+            ckpt.save(path, params, metadata={"steps": steps,
+                                              "vocab": vocab_size})
+        pool.register(cfg, params=params, param_axes=axes)
+    return pool, corpus

@@ -1,0 +1,60 @@
+"""Training step: causal-LM loss (+ MoE aux), AdamW update, remat policy.
+
+The same function is used by the CPU examples (tiny pool training) and by
+the multi-pod dry-run (train_4k lowering)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import LanguageModel
+from ..optim import AdamWState, adamw_init, adamw_update, cosine_schedule
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def loss_fn(lm: LanguageModel, params, tokens, loss_mask=None,
+            remat: bool = True, extras: Optional[Dict] = None):
+    """Next-token CE over tokens; `loss_mask` (B, S) optionally masks pads.
+
+    Returns (loss, metrics)."""
+    extras = extras or {}
+    out = lm.train_logits(params, tokens, remat=remat, **extras)
+    logits, aux = out if lm.has_aux_loss() else (out, jnp.zeros((), jnp.float32))
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    if loss_mask is not None:
+        m = loss_mask[:, 1:].astype(jnp.float32)
+        ce = -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        ce = -jnp.mean(ll)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(lm: LanguageModel, base_lr: float = 3e-4,
+                    warmup: int = 20, total: int = 1000,
+                    remat: bool = True):
+    def step(ts: TrainState, tokens, loss_mask=None, extras=None):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(lm, p, tokens, loss_mask, remat, extras),
+            has_aux=True)(ts.params)
+        lr = cosine_schedule(ts.opt.step, base_lr, warmup, total)
+        new_params, new_opt = adamw_update(ts.params, grads, ts.opt, lr)
+        return TrainState(new_params, new_opt), {**metrics, "loss": loss,
+                                                 "lr": lr}
+    return step
+
+
+def init_train_state(lm: LanguageModel, key) -> TrainState:
+    params, _ = lm.init(key)
+    return TrainState(params=params, opt=adamw_init(params))

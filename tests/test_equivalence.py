@@ -1,0 +1,101 @@
+"""The paper's §5 Output Quality check: under greedy decoding, SpecRouter's
+committed stream is BIT-IDENTICAL to target-only autoregressive decoding —
+for any chain depth, window, batch, and with the adaptive scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChainRouter, ModelPool
+from repro.models import ModelConfig
+from repro.models.model import LanguageModel
+
+
+@pytest.fixture(scope="module")
+def pool():
+    p = ModelPool()
+    for (n, L, d, s) in [("m68", 2, 32, 1), ("m1b", 3, 48, 2),
+                         ("m7b", 4, 64, 3)]:
+        cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
+                          d_model=d, num_heads=4, num_kv_heads=2,
+                          d_ff=2 * d, vocab_size=61, dtype=jnp.float32)
+        lm = LanguageModel(cfg)
+        params, axes = lm.init(jax.random.PRNGKey(s))
+        p.register(cfg, params=params, param_axes=axes)
+    return p
+
+
+@pytest.fixture(scope="module")
+def reference(pool):
+    prompt = np.array(jax.random.randint(jax.random.PRNGKey(0),
+                                         (3, 7), 0, 61))
+    plens = np.array([7, 5, 6])
+    r = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                    fixed_chain=("m7b",), fixed_window=1)
+    ref = r.generate(prompt, plens, 14, request_id="ref")
+    return prompt, plens, ref
+
+
+@pytest.mark.parametrize("chain,window", [
+    (("m68", "m7b"), 2),
+    (("m68", "m7b"), 4),
+    (("m1b", "m7b"), 4),
+    (("m68", "m1b", "m7b"), 3),
+    (("m68", "m1b", "m7b"), 6),
+])
+def test_fixed_chain_equivalence(pool, reference, chain, window):
+    prompt, plens, ref = reference
+    r = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                    fixed_chain=chain, fixed_window=window)
+    out = r.generate(prompt, plens, 14, request_id="t")
+    for b in range(3):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
+
+
+def test_adaptive_equivalence(pool, reference):
+    prompt, plens, ref = reference
+    r = ChainRouter(pool, "m7b", greedy=True, adaptive=True)
+    out = r.generate(prompt, plens, 14, request_id="a")
+    for b in range(3):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
+    assert len(set(c for c, _ in out.chain_history)) >= 1
+
+
+def test_eos_early_stop(pool):
+    """Rows stopping at EOS must truncate exactly where target-only does."""
+    prompt = np.array(jax.random.randint(jax.random.PRNGKey(9),
+                                         (2, 6), 0, 61))
+    plens = np.array([6, 4])
+    kw = dict(greedy=True, adaptive=False, eos_token=2)
+    ref = ChainRouter(pool, "m7b", fixed_chain=("m7b",), fixed_window=1,
+                      **kw).generate(prompt, plens, 20, request_id="r")
+    out = ChainRouter(pool, "m7b", fixed_chain=("m68", "m7b"),
+                      fixed_window=4, **kw).generate(prompt, plens, 20,
+                                                     request_id="s")
+    for b in range(2):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
+
+
+def test_speculation_actually_accepts():
+    """A draft with IDENTICAL weights to the target must accept everything
+    under greedy (sanity that acceptance accounting isn't trivially zero).
+    Note: chains never repeat a model NAME (states are keyed by model), so
+    the twin is registered as a separate pool entry."""
+    p = ModelPool()
+    cfg = ModelConfig(name="twin-a", arch_type="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, dtype=jnp.float32)
+    lm = LanguageModel(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(5))
+    p.register(cfg, params=params, param_axes=axes)
+    import dataclasses as dc
+    cfg_b = dc.replace(cfg, name="twin-b")
+    p.register(cfg_b, params=params, param_axes=axes)
+
+    prompt = np.array(jax.random.randint(jax.random.PRNGKey(3),
+                                         (2, 6), 0, 61))
+    plens = np.array([6, 6])
+    r = ChainRouter(p, "twin-b", greedy=True, adaptive=False,
+                    fixed_chain=("twin-a", "twin-b"), fixed_window=4)
+    out = r.generate(prompt, plens, 12, request_id="x")
+    assert np.mean(out.acceptance_lengths) >= 4.9   # W accepted + bonus

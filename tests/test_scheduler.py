@@ -1,0 +1,109 @@
+"""ModelChainScheduler (Alg. 1, Eq. 7) and similarity/EMA units."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (EMA, ModelChainScheduler, PerformanceProfiler,
+                        SimilarityStore, acceptance_from_sim,
+                        expected_accepted)
+from repro.core.scheduler import ChainChoice
+
+
+def test_ema_formula():
+    e = EMA(alpha=0.3)
+    e.update(10.0)
+    assert e.get() == 10.0
+    e.update(20.0)
+    assert abs(e.get() - (0.3 * 20 + 0.7 * 10)) < 1e-9
+
+
+def test_simscore_eq6():
+    s = SimilarityStore(alpha=0.5)
+    s.update("a", "b", 0.4)
+    assert abs(s.sim_score("a", "b") - 0.6) < 1e-9
+    s.update("b", "a", 0.2)            # symmetric key
+    assert abs(s.sim_score("a", "b") - (1 - (0.5 * 0.2 + 0.5 * 0.4))) < 1e-9
+    assert s.sim_score("a", "a") == 1.0
+    # unobserved pairs default pessimistic
+    assert s.sim_score("a", "zzz") <= 0.2
+
+
+def test_acceptance_identity_mapping():
+    assert abs(acceptance_from_sim(0.7) - 0.7) < 1e-9
+    # calibrated sigmoid stays monotone
+    xs = [acceptance_from_sim(x, 1.5, 0.3) for x in (0.2, 0.5, 0.8)]
+    assert xs[0] < xs[1] < xs[2]
+
+
+def test_expected_accepted_geometric():
+    # Σ_{k=1..w} α^k
+    for a, w in [(0.5, 4), (0.9, 6), (0.0, 3), (1.0, 5)]:
+        want = sum(a ** k for k in range(1, w + 1))
+        assert abs(expected_accepted(a, w) - want) < 1e-9
+
+
+def _mk_sched(times, sims, target="t"):
+    prof = PerformanceProfiler()
+    for m, v in times.items():
+        prof.record("decode1", m, v)
+    store = SimilarityStore()
+    for (a, b), s in sims.items():
+        store.update(a, b, 1.0 - s)
+    cap = {m: 10.0 ** i for i, m in enumerate(sorted(times))}
+    return ModelChainScheduler(list(times), target, prof, store, cap,
+                               windows=(4,), verify_overhead=0.0,
+                               switch_penalty_steps=1e9)
+
+
+def test_two_level_matches_eq4():
+    """For a 2-model chain with ν=0 the predictor reduces to the paper's
+    Eq. 4 shape: T_eff = (W·T_q + T_p) / (Σ α^k + 1)."""
+    sched = _mk_sched({"q": 0.01, "t": 0.1}, {("q", "t"): 0.8})
+    t = sched.predict_t_eff(("q", "t"), 4)
+    acc = sum(0.8 ** k for k in range(1, 5))
+    want = (4 * 0.01 + 0.1) / (acc + 1)
+    assert abs(t - want) / want < 1e-6
+
+
+def test_scheduler_picks_analytic_argmin():
+    """With a fast, similar draft the chain must beat target-only; with a
+    dissimilar draft, target-only must win."""
+    sched = _mk_sched({"d": 0.005, "t": 0.1}, {("d", "t"): 0.9})
+    best = sched.get_optimal_chain()
+    assert best.chain == ("d", "t")
+
+    sched2 = _mk_sched({"d": 0.005, "t": 0.1}, {("d", "t"): 0.01})
+    best2 = sched2.get_optimal_chain()
+    assert best2.chain == ("t",)
+
+
+def test_three_level_beats_two_when_intermediate_helps():
+    """Classic multi-level setup: cheap draft, mid verifier with high
+    mutual similarity both ways, expensive target."""
+    times = {"a": 0.002, "m": 0.02, "t": 0.4}
+    sims = {("a", "m"): 0.9, ("a", "t"): 0.35, ("m", "t"): 0.9}
+    sched = _mk_sched(times, sims)
+    t3 = sched.predict_t_eff(("a", "m", "t"), 4)
+    t2 = sched.predict_t_eff(("a", "t"), 4)
+    assert t3 < t2
+    assert sched.get_optimal_chain().chain == ("a", "m", "t")
+
+
+def test_candidate_chains_end_with_target():
+    sched = _mk_sched({"a": 1, "b": 2, "t": 3}, {})
+    for c in sched.candidate_chains():
+        assert c[-1] == "t"
+    assert ("t",) in sched.candidate_chains()
+
+
+def test_window_is_searched():
+    prof = PerformanceProfiler()
+    prof.record("decode1", "d", 0.001)
+    prof.record("decode1", "t", 0.1)
+    store = SimilarityStore()
+    store.update("d", "t", 0.05)   # very similar -> bigger window pays
+    sched = ModelChainScheduler(["d", "t"], "t", prof, store,
+                                {"d": 1, "t": 100}, windows=(1, 8),
+                                verify_overhead=0.0)
+    assert sched.get_optimal_chain().window == 8

@@ -1,0 +1,115 @@
+"""Substrate units: optimizer, checkpoint store, data pipeline, sharding
+rules, profiler."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import exists, load, save
+from repro.core import PerformanceProfiler
+from repro.data import CorpusConfig, SyntheticCorpus, make_workload
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.sharding import RULES, spec_for, with_decode_rules
+
+
+# ---------------------------------------------------------------------------
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt = adamw_update(params, grads, opt, lr=0.05,
+                                   weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-6
+
+
+def test_cosine_schedule_shape():
+    import numpy as np
+    s = [float(cosine_schedule(jnp.asarray(t), 1.0, 10, 100))
+         for t in range(0, 100, 10)]
+    assert s[0] == 0.0 and abs(s[1] - 1.0) < 1e-6
+    assert all(a >= b - 1e-9 for a, b in zip(s[1:], s[2:]))  # decreasing
+
+
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    p = str(tmp_path / "ck")
+    save(p, tree, metadata={"x": 1})
+    assert exists(p)
+    got = load(p, tree)
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(np.asarray(got["b"]["c"], np.float32),
+                                  np.asarray(tree["b"]["c"], np.float32))
+
+
+# ---------------------------------------------------------------------------
+def test_corpus_determinism_and_learnability():
+    c1 = SyntheticCorpus(CorpusConfig(vocab_size=128, seed=5))
+    c2 = SyntheticCorpus(CorpusConfig(vocab_size=128, seed=5))
+    b1 = next(c1.batches(2, 32, seed=3))
+    b2 = next(c2.batches(2, 32, seed=3))
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.max() < 128 and b1.min() >= 0
+    # low-entropy: bigram repetition should be far above uniform chance
+    seq = c1.sample(np.random.default_rng(0), 4000)
+    bigrams = set(zip(seq[:-1], seq[1:]))
+    assert len(bigrams) < 0.2 * 128 * 128
+
+
+def test_workload_poisson_and_profiles():
+    c = SyntheticCorpus(CorpusConfig(vocab_size=64))
+    reqs = make_workload(c, "gsm8k", rate_rps=5.0, duration_s=20.0, seed=1)
+    assert len(reqs) > 50
+    arr = np.array([r.arrival_s for r in reqs])
+    assert np.all(np.diff(arr) >= 0)
+    gaps = np.diff(arr)
+    assert 0.05 < gaps.mean() < 0.6         # ~1/5 rps
+    mt = make_workload(c, "mtbench", rate_rps=5.0, duration_s=20.0, seed=1)
+    assert (np.mean([len(r.prompt) for r in mt])
+            > np.mean([len(r.prompt) for r in reqs]))  # mtbench longer
+
+
+# ---------------------------------------------------------------------------
+def test_sharding_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # with axis size 1 everything degrades to replication
+    assert spec_for(("batch", "seq"), (128, 4096), mesh, RULES) == P()
+
+
+def test_sharding_rules_priority():
+    # seq only takes the model axis if kv_heads cannot (decode rules)
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    r = with_decode_rules(RULES)
+    spec1 = spec_for(("layers", "batch", "seq", "kv_heads", "head_dim"),
+                     (40, 128, 32768, 16, 128), FakeMesh(), r)
+    assert spec1 == P(None, "data", None, "model")
+    spec2 = spec_for(("layers", "batch", "seq", "kv_heads", "head_dim"),
+                     (40, 128, 32768, 20, 128), FakeMesh(), r)  # kv=20 ✗
+    assert spec2 == P(None, "data", "model")
+
+
+# ---------------------------------------------------------------------------
+def test_profiler_verify_time_fallback():
+    p = PerformanceProfiler()
+    p.record("verify", "m", 0.1, block=5)
+    # exact hit
+    assert abs(p.verify_time("m", 5, 9.9) - 0.1) < 1e-9
+    # nearest-block scaled fallback, not the default
+    assert p.verify_time("m", 10, 9.9) != 9.9
+    # unknown model -> default
+    assert p.verify_time("zz", 5, 9.9) == 9.9

@@ -1,0 +1,83 @@
+"""Verification-rule correctness (paper §2.2): greedy exactness and
+distribution-preservation of rejection sampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import verification as ver
+
+
+def test_greedy_accept_prefix():
+    V = 11
+    logits = jnp.full((1, 4, V), -10.0)
+    # verifier argmaxes: 3, 5, 7 (then bonus position argmax 2)
+    for i, t in enumerate([3, 5, 7, 2]):
+        logits = logits.at[0, i, t].set(10.0)
+    cand = jnp.array([[3, 5, 9]])          # mismatch at position 2
+    res = ver.verify_greedy(cand, logits)
+    assert int(res.num_accepted[0]) == 2
+    assert int(res.next_token[0]) == 7     # correction = argmax at reject
+    assert int(res.rollback[0]) == 1
+
+    cand2 = jnp.array([[3, 5, 7]])         # all accepted -> bonus
+    res2 = ver.verify_greedy(cand2, logits)
+    assert int(res2.num_accepted[0]) == 3
+    assert int(res2.next_token[0]) == 2
+    assert int(res2.rollback[0]) == 0
+
+
+def test_greedy_inactive_row_noop():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 7))
+    cand = jnp.array([[1, 2, 3], [4, 5, 6]])
+    res = ver.verify_greedy(cand, logits, active=jnp.array([True, False]))
+    assert int(res.num_accepted[1]) == 0
+    assert int(res.rollback[1]) == 0       # nothing valid appended
+
+
+def test_splice_candidates():
+    cand = jnp.array([[10, 11, 12]])
+    res = ver.VerifyResult(
+        num_accepted=jnp.array([1]), next_token=jnp.array([99]),
+        next_probs=jnp.ones((1, 7)) / 7, rollback=jnp.array([2]),
+        dtv=jnp.zeros((1,)))
+    nxt, _, vlen = ver.splice_candidates(cand, None, res)
+    np.testing.assert_array_equal(nxt[0], [10, 99, 99, 99])
+    assert int(vlen[0]) == 2
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_rejection_sampling_unbiased(seed):
+    """Core SD theorem: verify(q-samples) ~ p exactly.  Tiny vocab, many
+    trials, chi-square-ish tolerance."""
+    V, N = 5, 4000
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p_logits = jax.random.normal(kp, (V,)) * 1.5
+    q_logits = jax.random.normal(kq, (V,)) * 1.5
+    p = jax.nn.softmax(p_logits)
+    q = jax.nn.softmax(q_logits)
+
+    # draft N tokens from q, verify each (window=1) against p
+    draft = jax.random.categorical(kd, jnp.broadcast_to(q_logits, (N, V)))
+    cand = draft[:, None]                                    # (N, 1)
+    vlogits = jnp.broadcast_to(p_logits, (N, 2, V))          # l_0 + bonus
+    cprobs = jnp.broadcast_to(q, (N, 1, V))
+    res = ver.verify_sampling(cand, vlogits, cprobs, kv)
+    # committed token per row: accepted draft or the resampled correction
+    committed = jnp.where(res.num_accepted == 1, cand[:, 0], res.next_token)
+    freq = np.bincount(np.asarray(committed), minlength=V) / N
+    np.testing.assert_allclose(freq, np.asarray(p), atol=0.035)
+
+
+def test_sampling_valid_len_bounds_acceptance():
+    V = 7
+    key = jax.random.PRNGKey(0)
+    cand = jnp.array([[1, 2, 3, 4]])
+    # verifier fully agrees with producer -> everything would be accepted
+    probs = jnp.ones((1, 4, V)) / V
+    logits = jnp.zeros((1, 5, V))
+    res = ver.verify_sampling(cand, logits, probs, key,
+                              valid_len=jnp.array([2]))
+    assert int(res.num_accepted[0]) <= 2
