@@ -15,6 +15,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller batch set / shorter workloads")
     ap.add_argument("--skip-serving", action="store_true")
+    ap.add_argument("--no-continuous", action="store_true",
+                    help="serve with the legacy stop-the-world batch-"
+                         "formation engine instead of slot-level "
+                         "continuous batching (A/B baseline)")
     args = ap.parse_args()
 
     from . import (analytic_model, chain_selection, roofline,
@@ -44,7 +48,8 @@ def main() -> None:
         serving_metrics.main(
             datasets=("gsm8k",) if args.quick
             else ("gsm8k", "humaneval", "mtbench", "mgsm"),
-            duration=6.0 if args.quick else 12.0)
+            duration=6.0 if args.quick else 12.0,
+            continuous=not args.no_continuous)
 
     print(f"# total bench time: {time.time()-t0:.0f}s")
 

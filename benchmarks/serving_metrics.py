@@ -2,7 +2,13 @@
 EAF, SLO attainment under Poisson load — per dataset profile
 (GSM8K / HumanEval / MTBench / MGSM), SpecRouter vs TMO vs SSD.
 
-Output CSV: serving,<dataset>,<method>,<goodput>,<ttft>,<tpot>,<slo>,<eaf>.
+Requests are served with slot-level continuous batching by default
+(``continuous=False`` reproduces the legacy stop-the-world batch-formation
+engine for A/B comparison — ``benchmarks/run.py --no-continuous``).
+Queueing delay is billed to TTFT in both modes.
+
+Output CSV: serving,<dataset>,<method>,<goodput>,<ttft>,<p95_ttft>,
+<tpot>,<slo>,<queue>,<eaf>.
 """
 from __future__ import annotations
 
@@ -23,7 +29,7 @@ METHODS = {
 
 def main(datasets=("gsm8k", "humaneval", "mtbench", "mgsm"),
          rate: float = 0.5, duration: float = 12.0, batch: int = 4,
-         print_csv: bool = True) -> List[Dict]:
+         print_csv: bool = True, continuous: bool = True) -> List[Dict]:
     pool, corpus = build_trained_pool(verbose=False)
     rows = []
     for ds in datasets:
@@ -31,17 +37,19 @@ def main(datasets=("gsm8k", "humaneval", "mtbench", "mgsm"),
         for method, kw in METHODS.items():
             reqs = make_workload(corpus, ds, rate, duration, seed=13)
             eng = ServingEngine(pool, "demo-7b", batch_size=batch,
-                                slo_latency_s=45.0, router_kwargs=kw)
+                                slo_latency_s=45.0, router_kwargs=kw,
+                                continuous=continuous)
             m = eng.run(reqs)
             if method == "tmo":
                 base_tpot = m.avg_tpot_s
             eaf = base_tpot / m.avg_tpot_s if base_tpot else float("nan")
-            rows.append(dict(dataset=ds, method=method, **m.as_dict(),
-                             eaf=eaf))
+            rows.append(dict(dataset=ds, method=method,
+                             continuous=continuous, **m.as_dict(), eaf=eaf))
             if print_csv:
                 print(f"serving,{ds},{method},{m.goodput_tps:.1f},"
-                      f"{m.avg_ttft_s:.3f},{m.avg_tpot_s:.4f},"
-                      f"{m.slo_attainment:.3f},{eaf:.2f}")
+                      f"{m.avg_ttft_s:.3f},{m.p95_ttft_s:.3f},"
+                      f"{m.avg_tpot_s:.4f},{m.slo_attainment:.3f},"
+                      f"{m.avg_queue_s:.3f},{eaf:.2f}")
     return rows
 
 

@@ -1,9 +1,11 @@
 """End-to-end serving driver (the paper's kind of system): Poisson request
-arrivals from a dataset profile, batched multi-level speculative serving,
-full §5 metric report, with TMO / SSD baselines for the EAF speedup.
+arrivals from a dataset profile, slot-level continuously-batched
+multi-level speculative serving, full §5 metric report, with TMO / SSD
+baselines for the EAF speedup.
 
     PYTHONPATH=src python examples/serve_specrouter.py \
-        [--dataset gsm8k] [--rate 0.5] [--duration 20] [--batch 4]
+        [--dataset gsm8k] [--rate 0.5] [--duration 20] [--batch 4] \
+        [--no-continuous]   # legacy stop-the-world batch formation
 """
 import argparse
 
@@ -19,10 +21,12 @@ def run(pool, corpus, args, label, router_kwargs):
                          seed=7)
     eng = ServingEngine(pool, "demo-7b", batch_size=args.batch,
                         slo_latency_s=args.slo,
-                        router_kwargs=router_kwargs)
+                        router_kwargs=router_kwargs,
+                        continuous=not args.no_continuous)
     m = eng.run(reqs)
     print(f"[{label:<22}] goodput {m.goodput_tps:7.1f} tok/s | "
-          f"TTFT {m.avg_ttft_s:6.2f}s | TPOT {m.avg_tpot_s*1e3:7.1f}ms | "
+          f"TTFT {m.avg_ttft_s:6.2f}s (p95 {m.p95_ttft_s:5.2f}s, "
+          f"queue {m.avg_queue_s:5.2f}s) | TPOT {m.avg_tpot_s*1e3:7.1f}ms | "
           f"p95 lat {m.p95_latency_s:6.2f}s | SLO {m.slo_attainment:5.1%} | "
           f"acc-len {m.avg_acceptance_len:4.2f}")
     return m
@@ -37,6 +41,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--slo", type=float, default=60.0)
     ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--no-continuous", action="store_true",
+                    help="legacy stop-the-world batch formation (A/B)")
     args = ap.parse_args()
 
     pool, corpus = build_trained_pool(steps=args.steps)

@@ -15,17 +15,28 @@ Per cycle:
 State sync invariant: a model's cache holds exactly ``seq[:seq_len-1]`` for
 each row once its gap is caught up; gaps (from consensus < k_N) are
 re-fed as the masked prefix of its next block (DESIGN §4).
+
+Slot-level continuous batching (paper §4 "asynchronous batch processing"):
+the generation loop is exposed as a step/cycle API via ``RouterSession`` —
+``admit`` (catch-up prefill of a request into a free slot), ``run_cycle``
+(one speculative cycle over every active slot), ``retire`` (free a finished
+slot without stalling live ones).  ``ChainRouter.generate`` is a bulk
+wrapper over the same session machinery: admit all rows, cycle until every
+row terminates.  Slots are batch rows of ONE per-model session state
+(key ``model/session_id``), so admission/retirement is per-row state
+surgery (Executor.insert / Executor.retire), not state re-creation.
 """
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from . import verification as ver
-from .executor import (DraftRequest, Executor, PrefillRequest,
+from .executor import (DraftRequest, Executor, InsertRequest, PrefillRequest,
                        RollbackRequest, VerifyRequest)
 from .model_pool import ModelPool
 from .profiler import PerformanceProfiler
@@ -46,6 +57,16 @@ class GenerationResult:
     cycle_wall_s: List[float] = dataclasses.field(default_factory=list)
     commits_per_cycle: List[np.ndarray] = dataclasses.field(
         default_factory=list)     # (B,) per cycle
+
+
+@dataclasses.dataclass
+class CycleReport:
+    """One speculative cycle of a RouterSession."""
+    commits: np.ndarray           # (B,) tokens committed per slot
+    wall_s: float                 # measured cycle wall time
+    chain: Tuple[str, ...]
+    window: int
+    acc_mean: float               # mean committed over pre-cycle active slots
 
 
 class ChainRouter:
@@ -156,10 +177,80 @@ class ChainRouter:
         self._prefill_model(m, request_id, seq, seq_len, max_len)
         self.profiler.count(f"reprefill.{m}")
 
+    def _insert_row(self, m: str, session_id: str, row: int,
+                    seq: np.ndarray, seq_len: np.ndarray,
+                    max_len: int) -> Optional[np.ndarray]:
+        """Catch-up prefill for a request admitted into slot ``row`` of a
+        live session: free the row, then feed ``seq[row, :seq_len[row]-1]``
+        with row-only validity (occupied rows run as masked no-ops).
+
+        Precondition: the row is already free (RouterSession.retire wiped
+        it, or it was empty at open_states — prefill leaves unoccupied rows
+        fully masked with zeroed carries), so no re-retire is needed here.
+
+        Returns the admitted row's (1, V) next-token distribution for
+        similarity probing, or None when there is nothing to feed (1-token
+        prompt, or the capacity guard rebuilt the whole state — which
+        prefills the new row too)."""
+        B = seq.shape[0]
+        sid = StateManager.key(m, session_id)
+        n = int(seq_len[row]) - 1      # cache invariant: hold seq[:len-1]
+        if n <= 0:
+            return None
+        w_max = 1                      # reserve for the BUCKETED width: the
+        while w_max < n:               # append is w wide, and an under-
+            w_max *= 2                 # reservation would let the slice
+        self._ensure_capacity(m, session_id, w_max + 2, seq,  # clamp onto
+                              seq_len, max_len)               # live rows
+        done = int(self.states.lengths(sid)[row])   # re-prefill may have run
+        if done >= n:
+            return None
+        w = 1
+        while w < n - done:            # pow-2 width buckets bound jit shapes
+            w *= 2                     # (w <= w_max since n-done <= n)
+        tokens = np.zeros((B, w), np.int32)
+        valid = np.zeros((B, w), bool)
+        tokens[row, :n - done] = seq[row, done:n]
+        valid[row, :n - done] = True
+        probs = self.executor.insert(InsertRequest(
+            model=m, request_id=session_id, tokens=tokens, valid=valid))
+        self.profiler.count(f"admit.{m}")
+        return probs[row:row + 1]
+
+    def _apply_termination(self, seq: np.ndarray, seq_len: np.ndarray,
+                           prompt_lens: np.ndarray, budget: np.ndarray,
+                           active: np.ndarray) -> None:
+        """Per-row termination: budget exhaustion (over-committed tokens in
+        the final cycle are truncated — the prefix still equals target-only
+        output, so equivalence is preserved) and EOS."""
+        B = seq.shape[0]
+        for b in range(B):
+            if not active[b]:
+                continue
+            if seq_len[b] - prompt_lens[b] >= budget[b]:
+                seq_len[b] = prompt_lens[b] + budget[b]
+                active[b] = False
+            if self.eos >= 0:
+                row = seq[b, prompt_lens[b]:seq_len[b]]
+                hits = np.where(row == self.eos)[0]
+                if hits.size:
+                    seq_len[b] = prompt_lens[b] + hits[0] + 1
+                    active[b] = False
+
     # ------------------------------------------------------------------
+    def start_session(self, num_slots: int, max_len: int,
+                      session_id: str = "sess0") -> "RouterSession":
+        """Open a slot-level continuous-batching session (the serving
+        engine's entry point; ``generate`` wraps the same machinery)."""
+        return RouterSession(self, num_slots, max_len, session_id)
+
     def generate(self, prompt: np.ndarray, prompt_lens: np.ndarray,
                  max_new_tokens, request_id: str = "req0",
                  capacity_margin: int = 4) -> GenerationResult:
+        """Batch generate-to-completion: a bulk wrapper over the slot
+        session — every row is admitted up front (one batched prefill,
+        identical cost profile to the pre-session code path), then cycles
+        run until all rows terminate."""
         B, Tp = prompt.shape
         budget = (np.full(B, max_new_tokens, np.int64)
                   if np.isscalar(max_new_tokens)
@@ -170,71 +261,35 @@ class ChainRouter:
         max_len = Tp + (max_new + 2) * 2 + self.gcap + \
             (W_max + self.scheduler.max_chain_len) * capacity_margin
 
-        seq = np.zeros((B, max_len + 8), np.int32)
-        seq[:, :Tp] = prompt
-        seq_len = prompt_lens.astype(np.int64).copy()
-        active = np.ones((B,), bool)
-
-        # --- prefill every pool model; probe pairwise similarity (§4.1) --
-        import time as _time
+        sess = self.start_session(B, max_len, session_id=request_id)
+        sess.seq[:, :Tp] = prompt
+        sess.seq_len[:] = prompt_lens.astype(np.int64)
+        sess.prompt_len[:] = sess.seq_len
+        sess.budget[:] = budget
+        sess.occupied[:] = True
+        sess.active[:] = True
         t0 = _time.perf_counter()
-        probe: Dict[str, np.ndarray] = {}
-        for m in self.pool.names():
-            probe[m] = self._prefill_model(m, request_id, seq, seq_len,
-                                           max_len)
-        self.sims.update_many(pairwise_dtv(probe))
+        sess.open_states()
         prefill_wall = _time.perf_counter() - t0
 
-        chain_history, acc_lens = [], []
-        cycle_wall, commits_hist = [], []
-        committed = 0
-        steps = 0
-        choice: Optional[ChainChoice] = None
-        while active.any() and committed < max_new * B:
-            if choice is None or (self.adaptive
-                                  and steps % self.reschedule_every == 0):
-                if self.fixed_chain is not None:
-                    choice = ChainChoice(
-                        self.fixed_chain, self.fixed_window or 4, 0.0)
-                else:
-                    choice = self.scheduler.get_optimal_chain()
-            chain, W = choice.chain, choice.window
-            chain_history.append((chain, W))
-
-            tc = _time.perf_counter()
-            n_acc = self._one_cycle(chain, W, request_id, seq, seq_len,
-                                    active)
-            cycle_wall.append(_time.perf_counter() - tc)
-            commits_hist.append(n_acc.copy())
-            acc_lens.append(float(np.mean(n_acc[active])) if active.any()
-                            else 0.0)
-            committed += int(n_acc.sum())
-            steps += 1
-
-            # termination per row (per-row budgets; over-committed tokens
-            # in the final cycle are truncated — the prefix still equals
-            # target-only output, so equivalence is preserved)
-            for b in range(B):
-                if not active[b]:
-                    continue
-                if seq_len[b] - prompt_lens[b] >= budget[b]:
-                    seq_len[b] = prompt_lens[b] + budget[b]
-                    active[b] = False
-                if self.eos >= 0:
-                    row = seq[b, prompt_lens[b]:seq_len[b]]
-                    hits = np.where(row == self.eos)[0]
-                    if hits.size:
-                        seq_len[b] = prompt_lens[b] + hits[0] + 1
-                        active[b] = False
-            if steps > max_new * 4 + 16:   # safety net
+        acc_lens, cycle_wall, commits_hist = [], [], []
+        while sess.active.any() and sess.committed < max_new * B:
+            rep = sess.run_cycle()
+            cycle_wall.append(rep.wall_s)
+            commits_hist.append(rep.commits.copy())
+            acc_lens.append(rep.acc_mean)
+            if sess.steps > max_new * 4 + 16:   # safety net
                 break
 
-        self.states.release_request(request_id)
+        seq, seq_len, prompt_len = sess.seq, sess.seq_len, sess.prompt_len
         seqs = [seq[b, :seq_len[b]].copy() for b in range(B)]
-        gens = [seq[b, prompt_lens[b]:seq_len[b]].copy() for b in range(B)]
+        gens = [seq[b, prompt_len[b]:seq_len[b]].copy() for b in range(B)]
+        hist = sess.chain_history
+        steps = sess.steps
+        sess.close()
         return GenerationResult(seqs, gens, steps,
                                 int(sum(len(g) for g in gens)),
-                                chain_history, acc_lens,
+                                hist, acc_lens,
                                 prefill_wall_s=prefill_wall,
                                 cycle_wall_s=cycle_wall,
                                 commits_per_cycle=commits_hist)
@@ -348,3 +403,145 @@ class ChainRouter:
         self.profiler.count("cycles")
         self.profiler.count("committed", float(n_committed.sum()))
         return n_committed
+
+
+class RouterSession:
+    """Slot-level continuous-batching handle (§4 asynchronous batching).
+
+    A session owns a fixed pool of ``num_slots`` slots backed by one
+    batch-sized ModelState per pool model (state key
+    ``model/session_id``).  Request lifecycle per slot:
+
+        QUEUED --admit()--> PREFILL --> DECODING --retire()--> DONE
+                 (catch-up prefill      (run_cycle() advances
+                  fills the new row;     every active slot)
+                  live rows are
+                  masked no-ops)
+
+    Admission happens between speculation cycles; retirement frees a row
+    without stalling the others (the freed row simply goes inactive in the
+    batched kernels until re-filled).
+    """
+
+    def __init__(self, router: ChainRouter, num_slots: int, max_len: int,
+                 session_id: str = "sess0"):
+        self.router = router
+        self.num_slots = int(num_slots)
+        self.max_len = int(max_len)
+        self.session_id = session_id
+        B = self.num_slots
+        self.seq = np.zeros((B, self.max_len + 8), np.int32)
+        self.seq_len = np.zeros(B, np.int64)
+        self.prompt_len = np.zeros(B, np.int64)
+        self.budget = np.zeros(B, np.int64)
+        self.occupied = np.zeros(B, bool)   # slot holds a live request
+        self.active = np.zeros(B, bool)     # still generating
+        self.steps = 0
+        self.committed = 0
+        self.chain_history: List[Tuple[Tuple[str, ...], int]] = []
+        self._opened = False                # per-model states exist
+        self._choice: Optional[ChainChoice] = None
+
+    # ---- lifecycle ----------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.num_slots) if not self.occupied[s]]
+
+    def admit(self, slot: int, prompt: np.ndarray,
+              max_new_tokens: int) -> float:
+        """Admit a request into a free slot (QUEUED -> PREFILL): write its
+        prompt into the slot row and catch-up-prefill every pool model.
+        Returns the measured admission wall time in seconds."""
+        assert not self.occupied[slot], f"slot {slot} is occupied"
+        prompt = np.asarray(prompt)
+        Lp = int(len(prompt))
+        assert Lp >= 1, "empty prompt"
+        t0 = _time.perf_counter()
+        self.seq[slot, :] = 0
+        self.seq[slot, :Lp] = prompt
+        self.seq_len[slot] = Lp
+        self.prompt_len[slot] = Lp
+        self.budget[slot] = int(max_new_tokens)
+        self.occupied[slot] = True
+        self.active[slot] = True
+        r = self.router
+        if not self._opened:
+            self.open_states(probe_row=slot)
+        else:
+            probe: Dict[str, np.ndarray] = {}
+            for m in r.pool.names():
+                p = r._insert_row(m, self.session_id, slot, self.seq,
+                                  self.seq_len, self.max_len)
+                if p is not None:
+                    probe[m] = p
+            if len(probe) >= 2:   # admission doubles as a similarity probe
+                r.sims.update_many(pairwise_dtv(probe))
+        return _time.perf_counter() - t0
+
+    def open_states(self, probe_row: Optional[int] = None) -> None:
+        """Create every pool model's batch state from the current
+        seq/seq_len snapshot (first admission / bulk generate boot) and
+        seed the pairwise similarity table (§4.1)."""
+        r = self.router
+        probe: Dict[str, np.ndarray] = {}
+        for m in r.pool.names():
+            probe[m] = r._prefill_model(m, self.session_id, self.seq,
+                                        self.seq_len, self.max_len)
+        if probe_row is not None:
+            probe = {m: p[probe_row:probe_row + 1]
+                     for m, p in probe.items()}
+        r.sims.update_many(pairwise_dtv(probe))
+        self._opened = True
+
+    def run_cycle(self) -> CycleReport:
+        """One speculative cycle over every active slot (DECODING step).
+        Chain/window selection follows the router's adaptive schedule;
+        per-slot budget/EOS termination is applied after the cycle."""
+        r = self.router
+        B = self.num_slots
+        if not self.active.any():
+            return CycleReport(np.zeros(B, np.int64), 0.0, (), 0, 0.0)
+        if self._choice is None or (r.adaptive
+                                    and self.steps % r.reschedule_every == 0):
+            if r.fixed_chain is not None:
+                self._choice = ChainChoice(r.fixed_chain,
+                                           r.fixed_window or 4, 0.0)
+            else:
+                self._choice = r.scheduler.get_optimal_chain()
+        chain, W = self._choice.chain, self._choice.window
+        self.chain_history.append((chain, W))
+        t0 = _time.perf_counter()
+        n_acc = r._one_cycle(chain, W, self.session_id, self.seq,
+                             self.seq_len, self.active)
+        wall = _time.perf_counter() - t0
+        acc_mean = float(np.mean(n_acc[self.active]))
+        self.committed += int(n_acc.sum())
+        self.steps += 1
+        r._apply_termination(self.seq, self.seq_len, self.prompt_len,
+                             self.budget, self.active)
+        return CycleReport(n_acc, wall, chain, W, acc_mean)
+
+    def generated(self, slot: int) -> np.ndarray:
+        """The slot's committed output tokens so far (prompt excluded)."""
+        return self.seq[slot,
+                        self.prompt_len[slot]:self.seq_len[slot]].copy()
+
+    def retire(self, slot: int) -> np.ndarray:
+        """Free a finished slot (DECODING -> DONE) and return its output.
+        The row is released in every model state (recurrent carries wiped)
+        so a later admit() can reuse it; live slots are untouched."""
+        out = self.generated(slot)
+        rows = np.zeros(self.num_slots, bool)
+        rows[slot] = True
+        if self._opened:
+            for m in self.router.pool.names():
+                self.router.executor.retire(m, self.session_id, rows)
+        self.occupied[slot] = False
+        self.active[slot] = False
+        self.seq_len[slot] = 0
+        self.prompt_len[slot] = 0
+        return out
+
+    def close(self) -> None:
+        """Release every model state owned by this session."""
+        self.router.states.release_request(self.session_id)
+        self._opened = False

@@ -2,9 +2,10 @@
 
 The Executor is the data-plane dispatcher: it receives operation requests
 from the ChainRouter, routes them to the specialized processors
-(Prefill/Draft/Verify/Rollback), resolves models via the ModelPool and
-state via the StateManager, and wraps every call with PerformanceProfiler
-timing (the feedback loop of §4.6).
+(Prefill/Draft/Verify/Rollback, plus Insert/Retire for slot-level
+continuous batching), resolves models via the ModelPool and state via the
+StateManager, and wraps every call with PerformanceProfiler timing (the
+feedback loop of §4.6).
 
 All device computation goes through per-(model, op, shape) jitted callables
 cached here.
@@ -74,6 +75,17 @@ class RollbackRequest:
     r: np.ndarray                 # (B,) int32
 
 
+@dataclasses.dataclass
+class InsertRequest:
+    """Slot-level continuous batching: catch-up prefill of newly admitted
+    rows into an EXISTING batch state.  ``valid`` marks the admitted rows'
+    real tokens; live rows run as masked no-ops and are untouched."""
+    model: str
+    request_id: str               # session id (state key namespace)
+    tokens: np.ndarray            # (B, T) int32, left-aligned per row
+    valid: np.ndarray             # (B, T) bool
+
+
 class Executor:
     def __init__(self, pool: ModelPool, states: StateManager,
                  profiler: PerformanceProfiler):
@@ -126,7 +138,8 @@ class Executor:
         params = self.pool.params(req.model)
         sid = StateManager.key(req.model, req.request_id)
         B = req.tokens.shape[0]
-        state, _ = lm.make_state(B, req.max_len, with_snaps=req.with_snaps)
+        state, state_axes = lm.make_state(B, req.max_len,
+                                          with_snaps=req.with_snaps)
         key = ("prefillop", req.model, req.tokens.shape)
         if key not in self._jit_cache:
             def f(params, state, tokens, valid, extras):
@@ -139,9 +152,34 @@ class Executor:
                 params, state, jnp.asarray(req.tokens),
                 jnp.asarray(req.valid), req.extras)
             logits = jax.block_until_ready(logits)
-        self.states.create(sid, state)
+        self.states.create(sid, state, layer_axes=state_axes.layers)
         probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
         return np.asarray(probs), sid
+
+    def insert(self, req: InsertRequest):
+        """InsertProcessor (continuous batching): feed the admitted rows'
+        prompt tokens through the model against the live session state,
+        appending their KV/recurrent entries without disturbing occupied
+        slots.  Returns (B, V) probs at each row's last valid position —
+        the admitted row's distribution doubles as a similarity probe."""
+        params = self.pool.params(req.model)
+        sid = StateManager.key(req.model, req.request_id)
+        state = self.states.get(sid)
+        fwd_last = self._fwd(req.model, "last")
+        with self.profiler.timed("insert", req.model,
+                                 tokens=int(req.valid.sum())):
+            logits, state = fwd_last(params, state,
+                                     jnp.asarray(req.tokens),
+                                     jnp.asarray(req.valid), {})
+            logits = jax.block_until_ready(logits)
+        self.states.update(sid, state)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+        return np.asarray(probs)
+
+    def retire(self, model: str, request_id: str, rows: np.ndarray):
+        """RetireProcessor (continuous batching): free finished slot rows of
+        a session state (logical release + recurrent-carry wipe)."""
+        self.states.free_rows(StateManager.key(model, request_id), rows)
 
     def _draft_scan(self, model: str, window: int, greedy: bool,
                     temperature: float):

@@ -5,28 +5,42 @@ Atomicity note: JAX states are immutable pytrees; every update is
 replace-on-success, so a failed processor call can never leave a state
 half-mutated — this *is* the paper's atomic-rollback requirement, obtained
 structurally rather than via locking.
+
+Slot-level continuous batching: a serving session keys ONE batch-B state
+per model (``model/session_id``); individual batch rows are *slots* that
+are freed (``free_rows``) when a request finishes and re-filled by a
+catch-up prefill when a new request is admitted.  ``create`` optionally
+records the state's layer-axes pytree so ``free_rows`` can wipe recurrent
+per-row carries exactly (named ``"batch"`` axes), not heuristically.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.kv_cache import ModelState, fragmentation, defragment
+from ..models.kv_cache import (ModelState, fragmentation, defragment,
+                               free_rows as _free_rows)
 
 
 class StateManager:
     def __init__(self, defrag_threshold: float = 0.5):
         self._states: Dict[str, ModelState] = {}
+        self._axes: Dict[str, Any] = {}
         self._lock = threading.Lock()
         self.defrag_threshold = defrag_threshold
         self.defrag_count = 0
 
-    def create(self, state_id: str, state: ModelState):
+    def create(self, state_id: str, state: ModelState,
+               layer_axes: Any = None):
         with self._lock:
             self._states[state_id] = state
+            if layer_axes is not None:
+                self._axes[state_id] = layer_axes
+            else:
+                self._axes.pop(state_id, None)
 
     def get(self, state_id: str) -> ModelState:
         return self._states[state_id]
@@ -38,12 +52,20 @@ class StateManager:
     def release(self, state_id: str):
         with self._lock:
             self._states.pop(state_id, None)
+            self._axes.pop(state_id, None)
 
     def release_request(self, request_id: str):
-        """GC every model's state for a finished request."""
+        """GC every model's state for a finished request/session."""
         with self._lock:
             for k in [k for k in self._states if k.endswith("/" + request_id)]:
                 self._states.pop(k)
+                self._axes.pop(k, None)
+
+    def free_rows(self, state_id: str, rows: np.ndarray):
+        """Retire slot rows of a session state: logical release plus exact
+        per-row recurrent-carry wipe (uses the axes recorded at create)."""
+        st = self._states[state_id]
+        self.update(state_id, _free_rows(st, rows, self._axes.get(state_id)))
 
     def maybe_defragment(self, state_id: str, force: bool = False) -> bool:
         """Beyond-paper: compact masked holes when fragmentation is high

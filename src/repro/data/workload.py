@@ -29,14 +29,23 @@ class Request:
     max_new_tokens: int
     dataset: str
     # filled by the engine:
-    start_s: float = -1.0
+    start_s: float = -1.0        # slot admission (continuous) / batch start
     first_token_s: float = -1.0
     finish_s: float = -1.0
     generated: int = 0
 
     @property
     def ttft(self):
+        """Time to first token, queueing delay included: the clock starts
+        at arrival, not at admission."""
         return self.first_token_s - self.arrival_s
+
+    @property
+    def queue_delay(self):
+        """Arrival -> slot-admission (or batch-start) wait."""
+        if self.start_s < 0:
+            return float("nan")
+        return self.start_s - self.arrival_s
 
     @property
     def latency(self):

@@ -116,6 +116,49 @@ def rollback(state: ModelState, r: jnp.ndarray) -> ModelState:
     return physical_reclaim(logical_rollback(state, r))
 
 
+def free_rows(state: ModelState, rows, layer_axes=None) -> ModelState:
+    """Retire a subset of batch rows so their slots can host new requests
+    (slot-level continuous batching).
+
+    Logical release is pure mask arithmetic: the rows' cache entries become
+    dead (mask False, length 0) and are reclaimed by ``defragment`` under
+    capacity pressure.  Per-position caches (named ``"seq"`` axis —
+    attention KV and quant scales) need nothing more: masked slots are
+    never attended, and rewriting them per retirement would be an
+    O(L·B·S·H·hd) copy on the serving hot path.  Positionless recurrent
+    carries (SSM / hybrid) WOULD leak the old request into the next
+    occupant, so when ``layer_axes`` (the axes pytree from ``make_state``)
+    is provided, every seq-less layer leaf with a named ``"batch"`` axis is
+    zeroed along that axis for the freed rows.  Snapshot rings keep stale
+    entries: they are keyed by physical slot, and a freshly admitted row
+    only ever rolls back to slots written after its admission.
+    """
+    rows = jnp.asarray(rows, bool)                # (B,) True = free this row
+    keep = ~rows
+    new = dataclasses.replace(
+        state,
+        mask=state.mask & keep[:, None],
+        length=jnp.where(rows, 0, state.length).astype(jnp.int32),
+    )
+    if layer_axes is None:
+        return new
+
+    leaves, treedef = jax.tree.flatten(state.layers)
+    ax_leaves = treedef.flatten_up_to(layer_axes)
+
+    def wipe(x, ax):
+        if not isinstance(ax, tuple) or "batch" not in ax or "seq" in ax:
+            return x
+        bi = ax.index("batch")
+        shape = [1] * x.ndim
+        shape[bi] = keep.shape[0]
+        return x * keep.reshape(shape).astype(x.dtype)
+
+    new_leaves = [wipe(x, ax) for x, ax in zip(leaves, ax_leaves)]
+    return dataclasses.replace(
+        new, layers=jax.tree.unflatten(treedef, new_leaves))
+
+
 def fragmentation(state: ModelState) -> jnp.ndarray:
     """Fraction of physically-used slots that are logically dead."""
     S = state.capacity

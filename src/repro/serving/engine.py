@@ -1,14 +1,31 @@
-"""Serving engine: batches Poisson-arriving requests and runs them through
-the SpecRouter ChainRouter, collecting the paper's §5 metrics
-(goodput, request throughput, TTFT, TPOT, EAF, SLO attainment).
+"""Serving engine: schedules Poisson-arriving requests onto the SpecRouter
+ChainRouter and collects the paper's §5 metrics (goodput, request
+throughput, TTFT, TPOT, EAF, SLO attainment).
 
-Batching model: iteration-level batch formation — requests queue until
-``batch_size`` are available (or ``batch_wait_s`` elapses), then the batch
-generates to completion.  Per-request TTFT/TPOT are derived from the
-router's per-cycle wall times and per-row commit history (a finished row's
-later cycles don't bill to it).  This is simpler than slot-level continuous
-batching but preserves the paper's measurement semantics; the queueing
-delay is fully accounted in TTFT.
+Batching model (default): **slot-level continuous batching** — a fixed pool
+of ``batch_size`` slots, per-slot request lifecycle
+
+    QUEUED -> PREFILL -> DECODING -> DONE
+
+New requests are admitted into freed slots *between* speculation cycles
+(RouterSession.admit catch-up-prefills the new row while live rows run as
+masked no-ops) and finished rows retire without stalling the others, so a
+long request never blocks the arrivals queued behind it.  This is the
+iteration-level scheduling that SLO-aware serving systems (SpecServe,
+StreamServe) identify as the main goodput/p95-TTFT lever under load.
+
+Legacy model (``continuous=False``): stop-the-world batch formation —
+requests queue until ``batch_size`` are available (or ``batch_wait_s``
+elapses), then the batch generates to completion.  Kept as the reproducible
+A/B baseline (``benchmarks/run.py --no-continuous``).
+
+Timing semantics (both modes): arrivals follow the workload trace on a
+simulated clock; service time is the REAL wall time of the host models.
+Queueing delay is fully billed to TTFT — a request's first-token clock
+starts at ``arrival_s``, and every admission prefill / speculation cycle
+that runs before its first commit advances the clock it waits on.  A
+retired slot's later cycles bill nothing to it (``finish_s`` is fixed at
+retirement).
 """
 from __future__ import annotations
 
@@ -35,6 +52,7 @@ class ServingMetrics:
     num_requests: int
     makespan_s: float
     avg_acceptance_len: float
+    avg_queue_s: float = 0.0        # arrival -> slot admission
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -44,12 +62,14 @@ class ServingEngine:
     def __init__(self, pool: ModelPool, target: str,
                  batch_size: int = 4, batch_wait_s: float = 0.25,
                  slo_latency_s: float = 30.0,
-                 router_kwargs: Optional[dict] = None):
+                 router_kwargs: Optional[dict] = None,
+                 continuous: bool = True):
         self.pool = pool
         self.target = target
-        self.batch_size = batch_size
-        self.batch_wait_s = batch_wait_s
+        self.batch_size = batch_size       # slot count in continuous mode
+        self.batch_wait_s = batch_wait_s   # legacy batch-formation window
         self.slo = slo_latency_s
+        self.continuous = continuous
         self.router_kwargs = router_kwargs or {}
         # one router per engine: jit caches and scheduler state persist
         # across batches (recompiling per batch would bill compilation to
@@ -58,11 +78,83 @@ class ServingEngine:
                                    **self.router_kwargs)
 
     def run(self, requests: Sequence[Request]) -> ServingMetrics:
-        """Simulated-clock execution: arrivals follow the workload trace;
-        service time is the REAL wall time of the CPU models."""
         reqs = sorted(requests, key=lambda r: r.arrival_s)
+        if self.continuous:
+            acc_lens = self._run_continuous(reqs)
+        else:
+            acc_lens = self._run_legacy(reqs)
+        return self._metrics(reqs, acc_lens)
+
+    # ------------------------------------------------------------------
+    # continuous mode: slot-level admission / retirement
+    # ------------------------------------------------------------------
+    def _run_continuous(self, reqs: List[Request]) -> List[float]:
+        B = self.batch_size
+        # session capacity: the longest single request's footprint, doubled
+        # for cross-slot fragmentation headroom (the router force-defrags
+        # and, as a last resort, rebuilds states under capacity pressure)
+        router = self._router
+        lmax = max(len(r.prompt) + 2 * r.max_new_tokens + 2 for r in reqs)
+        w_max = max(router.scheduler.windows)
+        max_len = 2 * lmax + router.gcap + \
+            (w_max + router.scheduler.max_chain_len) * 4
+        # pow-2 capacity buckets: session state shapes (and thus every
+        # jitted program) are shared across workloads of similar size
+        # instead of recompiling per run
+        cap = 64
+        while cap < max_len:
+            cap *= 2
+        sess = router.start_session(B, cap, session_id="serve")
+
+        slot_req: List[Optional[Request]] = [None] * B
         clock = 0.0
         i = 0
+        acc_lens: List[float] = []
+        # each cycle commits >= 1 token per active slot, so total cycles is
+        # bounded by the total token budget; the cap is a corruption guard
+        cycle_cap = sum(r.max_new_tokens for r in reqs) * 4 + 16 * len(reqs)
+        cycles = 0
+        while i < len(reqs) or any(r is not None for r in slot_req):
+            busy = any(r is not None for r in slot_req)
+            if not busy and reqs[i].arrival_s > clock:
+                clock = reqs[i].arrival_s          # idle: jump to arrival
+            # admission between cycles: fill free slots with arrived reqs
+            for s in range(B):
+                if (slot_req[s] is None and i < len(reqs)
+                        and reqs[i].arrival_s <= clock):
+                    r = reqs[i]
+                    i += 1
+                    r.start_s = clock   # queueing ends, service begins
+                    clock += sess.admit(s, r.prompt, r.max_new_tokens)
+                    slot_req[s] = r
+            rep = sess.run_cycle()
+            clock += rep.wall_s
+            cycles += 1
+            if rep.commits.any():
+                acc_lens.append(rep.acc_mean)
+            for s in range(B):
+                r = slot_req[s]
+                if r is None:
+                    continue
+                if rep.commits[s] > 0 and r.first_token_s < 0:
+                    r.first_token_s = clock
+                if not sess.active[s]:
+                    r.finish_s = clock
+                    r.generated = len(sess.retire(s))
+                    slot_req[s] = None
+            if cycles > cycle_cap:
+                raise RuntimeError("continuous engine exceeded cycle cap "
+                                   "(stuck slot?)")
+        sess.close()
+        return acc_lens
+
+    # ------------------------------------------------------------------
+    # legacy mode: stop-the-world batch formation (A/B baseline)
+    # ------------------------------------------------------------------
+    def _run_legacy(self, reqs: List[Request]) -> List[float]:
+        clock = 0.0
+        i = 0
+        batch_no = 0
         acc_lens: List[float] = []
         while i < len(reqs):
             batch = [reqs[i]]
@@ -74,10 +166,54 @@ class ServingEngine:
                 batch.append(reqs[i])
                 i += 1
             start = max(clock, max(r.arrival_s for r in batch))
-            acc = self._serve_batch(batch, start)
+            acc = self._serve_batch(batch, start, f"batch{batch_no}")
+            batch_no += 1
             acc_lens.extend(acc)
             clock = max(r.finish_s for r in batch)
+        return acc_lens
 
+    def _serve_batch(self, batch: List[Request], start: float,
+                     batch_key: str) -> List[float]:
+        B = len(batch)
+        maxlen = max(len(r.prompt) for r in batch)
+        prompt = np.zeros((B, maxlen), np.int64)
+        lens = np.zeros(B, np.int64)
+        for b, r in enumerate(batch):
+            prompt[b, :len(r.prompt)] = r.prompt
+            lens[b] = len(r.prompt)
+            r.start_s = start
+        budgets = np.array([r.max_new_tokens for r in batch])
+
+        # state keys are namespaced by the batch, not by any single
+        # request's id: each slot row of the batch state is distinct and
+        # two batches can never collide on a shared request id
+        res = self._router.generate(prompt, lens, max_new_tokens=budgets,
+                                    request_id=batch_key)
+
+        # reconstruct per-request timing from per-cycle commits
+        t = start + res.prefill_wall_s
+        cum = np.zeros(B, np.int64)
+        first_at = np.full(B, -1.0)
+        done_at = np.full(B, -1.0)
+        gen_len = np.array([len(g) for g in res.generated])
+        for wall, commits in zip(res.cycle_wall_s, res.commits_per_cycle):
+            t += wall
+            newly = (cum == 0) & (commits > 0)
+            first_at[newly] = t
+            cum += commits
+            fin = (done_at < 0) & (cum >= np.minimum(budgets, gen_len))
+            done_at[fin] = t
+        done_at[done_at < 0] = t
+        first_at[first_at < 0] = t
+        for b, r in enumerate(batch):
+            r.first_token_s = first_at[b]
+            r.finish_s = done_at[b]
+            r.generated = int(gen_len[b])
+        return res.acceptance_lengths
+
+    # ------------------------------------------------------------------
+    def _metrics(self, reqs: List[Request],
+                 acc_lens: List[float]) -> ServingMetrics:
         done = [r for r in reqs if r.finish_s >= 0]
         total_tokens = sum(r.generated for r in done)
         makespan = max(r.finish_s for r in done) - min(r.arrival_s
@@ -85,6 +221,8 @@ class ServingEngine:
         ttfts = np.array([r.ttft for r in done])
         lats = np.array([r.latency for r in done])
         tpots = np.array([r.tpot for r in done if np.isfinite(r.tpot)])
+        queues = np.array([r.queue_delay for r in done
+                           if np.isfinite(r.queue_delay)])
         return ServingMetrics(
             goodput_tps=total_tokens / makespan,
             request_throughput_rps=len(done) / makespan,
@@ -98,41 +236,5 @@ class ServingEngine:
             num_requests=len(done),
             makespan_s=makespan,
             avg_acceptance_len=float(np.mean(acc_lens)) if acc_lens else 0.0,
+            avg_queue_s=float(queues.mean()) if queues.size else 0.0,
         )
-
-    # ------------------------------------------------------------------
-    def _serve_batch(self, batch: List[Request], start: float) -> List[float]:
-        B = len(batch)
-        maxlen = max(len(r.prompt) for r in batch)
-        prompt = np.zeros((B, maxlen), np.int64)
-        lens = np.zeros(B, np.int64)
-        for b, r in enumerate(batch):
-            prompt[b, :len(r.prompt)] = r.prompt
-            lens[b] = len(r.prompt)
-            r.start_s = start
-        budgets = np.array([r.max_new_tokens for r in batch])
-
-        res = self._router.generate(prompt, lens, max_new_tokens=budgets,
-                                    request_id=batch[0].request_id)
-
-        # reconstruct per-request timing from per-cycle commits
-        t = start + res.prefill_wall_s
-        cum = np.zeros(B, np.int64)
-        first_at = np.full(B, -1.0)
-        done_at = np.full(B, -1.0)
-        budget = np.array([r.max_new_tokens for r in batch])
-        gen_len = np.array([len(g) for g in res.generated])
-        for wall, commits in zip(res.cycle_wall_s, res.commits_per_cycle):
-            t += wall
-            newly = (cum == 0) & (commits > 0)
-            first_at[newly] = t
-            cum += commits
-            fin = (done_at < 0) & (cum >= np.minimum(budget, gen_len))
-            done_at[fin] = t
-        done_at[done_at < 0] = t
-        first_at[first_at < 0] = t
-        for b, r in enumerate(batch):
-            r.first_token_s = first_at[b]
-            r.finish_s = done_at[b]
-            r.generated = int(gen_len[b])
-        return res.acceptance_lengths
