@@ -17,11 +17,14 @@ def main(print_csv: bool = True):
     router.generate(prompts, lens, 16, request_id="fig2")
     choice = router.scheduler.get_optimal_chain()
     rows = []
-    for (chain, w), t in sorted(choice.table.items(), key=lambda kv: kv[1]):
-        sel = (chain, w) == (choice.chain, choice.window)
-        rows.append(dict(chain=chain, window=w, t_eff=t, selected=sel))
+    for (chain, w, tr), t in sorted(choice.table.items(),
+                                    key=lambda kv: kv[1]):
+        sel = (chain, w, tr) == (choice.chain, choice.window, choice.tree)
+        shape = str(tr) if tr is not None else "linear"
+        rows.append(dict(chain=chain, window=w, tree=shape, t_eff=t,
+                         selected=sel))
         if print_csv:
-            print(f"chain_selection,{'->'.join(chain)},{w},"
+            print(f"chain_selection,{'->'.join(chain)},{w},{shape},"
                   f"{t*1e3:.3f},{int(sel)}")
     assert rows[0]["selected"], "scheduler did not pick the argmin"
     return rows

@@ -19,10 +19,16 @@ def main() -> None:
                     help="serve with the legacy stop-the-world batch-"
                          "formation engine instead of slot-level "
                          "continuous batching (A/B baseline)")
+    ap.add_argument("--skip-tree", action="store_true",
+                    help="skip the linear-vs-tree speculation A/B")
+    ap.add_argument("--tree-shapes", default=None,
+                    help="comma-separated tree shapes for the A/B, e.g. "
+                         "'1x1x1,2x1x1,2x2x1' (equal depth; default: a "
+                         "depth-4 sweep)")
     args = ap.parse_args()
 
     from . import (analytic_model, chain_selection, roofline,
-                   serving_metrics, table2_speedup)
+                   serving_metrics, table2_speedup, tree_ab)
 
     t0 = time.time()
     print("# analytic_model (paper Eq. 2/3/4)")
@@ -42,6 +48,14 @@ def main() -> None:
     batches = (1, 4, 8) if args.quick else (1, 4, 8, 16, 32, 64)
     table2_speedup.main(batches=batches,
                         max_new=12 if args.quick else 24)
+
+    if not args.skip_tree:
+        print("# tree_ab (linear vs token-tree speculation)")
+        if args.tree_shapes:
+            shapes = tuple(args.tree_shapes.split(","))
+        else:
+            shapes = (("1x1x1", "2x2x1") if args.quick else tree_ab.SHAPES)
+        tree_ab.main(shapes=shapes, max_new=12 if args.quick else 24)
 
     if not args.skip_serving:
         print("# serving_metrics (paper SS5 metrics)")

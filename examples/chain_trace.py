@@ -24,11 +24,13 @@ def main():
         print(f"  {m:>9}: {router.profiler.decode_time(m, 0)*1e3:.2f} ms")
 
     choice = router.scheduler.get_optimal_chain()
-    print("\npredicted T_eff per candidate (chain, W) [ms/token]:")
-    for (chain, w), t in sorted(choice.table.items(), key=lambda kv: kv[1]):
-        tag = "  <== selected" if (chain, w) == (choice.chain,
-                                                 choice.window) else ""
-        print(f"  {'->'.join(chain):<28} W={w}: {t*1e3:8.2f}{tag}")
+    print("\npredicted T_eff per candidate (chain, shape) [ms/token]:")
+    for (chain, w, tr), t in sorted(choice.table.items(),
+                                    key=lambda kv: kv[1]):
+        sel = (chain, w, tr) == (choice.chain, choice.window, choice.tree)
+        shape = f"tree={tr}" if tr is not None else f"W={w}"
+        tag = "  <== selected" if sel else ""
+        print(f"  {'->'.join(chain):<28} {shape}: {t*1e3:8.2f}{tag}")
 
     hist = {}
     for c, w in out.chain_history:

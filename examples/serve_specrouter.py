@@ -5,6 +5,8 @@ baselines for the EAF speedup.
 
     PYTHONPATH=src python examples/serve_specrouter.py \
         [--dataset gsm8k] [--rate 0.5] [--duration 20] [--batch 4] \
+        [--tree 2x2x1]      # token-tree speculation (SSD-Tree baseline +
+                            # the shape joins SpecRouter's search space)
         [--no-continuous]   # legacy stop-the-world batch formation
 """
 import argparse
@@ -41,6 +43,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--slo", type=float, default=60.0)
     ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--tree", default=None, metavar="SHAPE",
+                    help="token-tree speculation shape, e.g. 2x2x1: adds "
+                         "an SSD-Tree static baseline and lets the "
+                         "adaptive scheduler pick the tree draft")
     ap.add_argument("--no-continuous", action="store_true",
                     help="legacy stop-the-world batch formation (A/B)")
     args = ap.parse_args()
@@ -53,10 +59,20 @@ def main():
     ssd = run(pool, corpus, args, "SSD-Smallest (static)",
               dict(adaptive=False, fixed_chain=("demo-68m", "demo-7b"),
                    fixed_window=4))
+    tree_kw = {}
+    if args.tree:
+        sst = run(pool, corpus, args, f"SSD-Tree {args.tree} (static)",
+                  dict(adaptive=False,
+                       fixed_chain=("demo-68m", "demo-7b"),
+                       fixed_tree=args.tree))
+        tree_kw = dict(tree_shapes=(args.tree,))
     ours = run(pool, corpus, args, "SpecRouter (ours)",
-               dict(adaptive=True))
-    print(f"\nEAF (vs TMO): SSD {tmo.avg_tpot_s/ssd.avg_tpot_s:.2f}x | "
-          f"SpecRouter {tmo.avg_tpot_s/ours.avg_tpot_s:.2f}x")
+               dict(adaptive=True, **tree_kw))
+    eaf = f"\nEAF (vs TMO): SSD {tmo.avg_tpot_s/ssd.avg_tpot_s:.2f}x | "
+    if args.tree:
+        eaf += f"SSD-Tree {tmo.avg_tpot_s/sst.avg_tpot_s:.2f}x | "
+    eaf += f"SpecRouter {tmo.avg_tpot_s/ours.avg_tpot_s:.2f}x"
+    print(eaf)
 
 
 if __name__ == "__main__":

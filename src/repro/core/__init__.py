@@ -1,9 +1,12 @@
 from .chain_router import ChainRouter, GenerationResult
-from .executor import (DraftRequest, Executor, PrefillRequest,
-                       RollbackRequest, VerifyRequest)
+from .executor import (DraftRequest, DraftTreeRequest, Executor,
+                       PrefillRequest, ResolveTreeRequest, RollbackRequest,
+                       VerifyRequest, VerifyTreeRequest)
 from .model_pool import DeviceManager, ModelPool
 from .profiler import EMA, PerformanceProfiler
-from .scheduler import ChainChoice, ModelChainScheduler, expected_accepted
+from .scheduler import (ChainChoice, ModelChainScheduler, expected_accepted,
+                        expected_tree_accepted)
 from .similarity import SimilarityStore, acceptance_from_sim, pairwise_dtv
 from .state_manager import StateManager
+from .token_tree import TokenTree
 from . import verification

@@ -36,13 +36,15 @@ import jax
 import numpy as np
 
 from . import verification as ver
-from .executor import (DraftRequest, Executor, InsertRequest, PrefillRequest,
-                       RollbackRequest, VerifyRequest)
+from .executor import (DraftRequest, DraftTreeRequest, Executor,
+                       InsertRequest, PrefillRequest, ResolveTreeRequest,
+                       RollbackRequest, VerifyRequest, VerifyTreeRequest)
 from .model_pool import ModelPool
 from .profiler import PerformanceProfiler
 from .scheduler import ChainChoice, ModelChainScheduler
 from .similarity import SimilarityStore, pairwise_dtv
 from .state_manager import StateManager
+from .token_tree import TokenTree
 
 
 @dataclasses.dataclass
@@ -80,6 +82,8 @@ class ChainRouter:
                  windows: Sequence[int] = (2, 3, 4, 6),
                  max_chain_len: int = 3,
                  reschedule_every: int = 1,
+                 tree_shapes: Sequence = (),
+                 fixed_tree=None,
                  seed: int = 0,
                  profiler: Optional[PerformanceProfiler] = None):
         self.pool = pool
@@ -94,6 +98,22 @@ class ChainRouter:
                 "chains cannot repeat a model (states are keyed by name)"
             assert self.fixed_chain[-1] == target
         self.fixed_window = fixed_window
+        # token-tree speculation (off unless shapes are configured): the
+        # scheduler may pick a tree draft for tree-capable chains, or a
+        # fixed_tree forces one.  branching-factor-1 shapes run through the
+        # same tree code path and are bit-identical to linear greedy.
+        tree_ok = {m: pool.cfg(m).supports_tree for m in pool.names()}
+        self.tree_shapes = tuple(TokenTree.parse(t) for t in tree_shapes)
+        self.fixed_tree = (TokenTree.parse(fixed_tree)
+                           if fixed_tree is not None else None)
+        if self.fixed_tree is not None:
+            assert self.fixed_chain is not None, \
+                "fixed_tree requires fixed_chain (give the adaptive " \
+                "scheduler tree_shapes instead)"
+            bad = [m for m in self.fixed_chain if not tree_ok[m]]
+            assert not bad, f"models {bad} cannot decode token trees"
+            assert len(self.fixed_chain) > 1, \
+                "tree speculation needs a draft model in the chain"
         self.reschedule_every = reschedule_every
         self.profiler = profiler or PerformanceProfiler()
         self.states = StateManager()
@@ -101,10 +121,19 @@ class ChainRouter:
         self.sims = SimilarityStore()
         self.scheduler = ModelChainScheduler(
             pool.names(), target, self.profiler, self.sims,
-            pool.capability(), max_chain_len=max_chain_len, windows=windows)
+            pool.capability(), max_chain_len=max_chain_len, windows=windows,
+            tree_shapes=self.tree_shapes, tree_capable=tree_ok)
         self.rng = jax.random.PRNGKey(seed)
-        # static gap-prefix width: one jit shape per (model, Tc)
-        self.gcap = max(windows) + max_chain_len + 2
+        # static gap-prefix width: one jit shape per (model, Tc).  Tree
+        # cycles can leave laggard levels up to depth D behind, so D joins
+        # the bound; max_block bounds the per-cycle appended block for
+        # capacity sizing (a tree appends all N nodes in one cycle).
+        trees = self.tree_shapes + ((self.fixed_tree,)
+                                    if self.fixed_tree else ())
+        depth_max = max((t.depth_levels for t in trees), default=0)
+        self.gcap = max(max(windows), depth_max) + max_chain_len + 2
+        self.max_block = max(max(windows),
+                             max((t.num_nodes for t in trees), default=0))
 
     # ------------------------------------------------------------------
     def _next_rng(self):
@@ -217,6 +246,27 @@ class ChainRouter:
         self.profiler.count(f"admit.{m}")
         return probs[row:row + 1]
 
+    def _sync_chain(self, chain: Tuple[str, ...], request_id: str,
+                    needed: int, seq: np.ndarray, seq_len: np.ndarray,
+                    active: np.ndarray, max_len: int) -> Dict:
+        """Catch every chain member up to the committed stream before a
+        cycle: capacity guard, gap prefix per model, and a full catch-up
+        re-prefill for models that fell beyond the gap bound.  Returns
+        {model: (prefix_tokens, prefix_valid)}."""
+        prefixes = {}
+        for m in chain:
+            self._ensure_capacity(m, request_id, needed, seq, seq_len,
+                                  max_len)
+            pfx, pval, _gap = self._gap_prefix(m, request_id, seq, seq_len,
+                                               active)
+            if pfx is None:   # fell too far behind -> catch-up prefill
+                self.states.release(StateManager.key(m, request_id))
+                self._prefill_model(m, request_id, seq, seq_len, max_len)
+                pfx, pval, _gap = self._gap_prefix(m, request_id, seq,
+                                                   seq_len, active)
+            prefixes[m] = (pfx, pval)
+        return prefixes
+
     def _apply_termination(self, seq: np.ndarray, seq_len: np.ndarray,
                            prompt_lens: np.ndarray, budget: np.ndarray,
                            active: np.ndarray) -> None:
@@ -256,10 +306,10 @@ class ChainRouter:
                   if np.isscalar(max_new_tokens)
                   else np.asarray(max_new_tokens, np.int64))
         max_new = int(budget.max())
-        W_max = max(self.scheduler.windows)
-        # physical capacity: prompt + worst-case appended blocks
+        # physical capacity: prompt + worst-case appended blocks (max_block
+        # covers the widest linear window or tree node count per cycle)
         max_len = Tp + (max_new + 2) * 2 + self.gcap + \
-            (W_max + self.scheduler.max_chain_len) * capacity_margin
+            (self.max_block + self.scheduler.max_chain_len) * capacity_margin
 
         sess = self.start_session(B, max_len, session_id=request_id)
         sess.seq[:, :Tp] = prompt
@@ -297,27 +347,23 @@ class ChainRouter:
     # ------------------------------------------------------------------
     def _one_cycle(self, chain: Tuple[str, ...], W: int, request_id: str,
                    seq: np.ndarray, seq_len: np.ndarray,
-                   active: np.ndarray) -> np.ndarray:
+                   active: np.ndarray,
+                   tree: Optional[TokenTree] = None) -> np.ndarray:
         """Execute one speculative cycle; mutates seq/seq_len in place.
-        Returns per-row committed token count."""
+        Returns per-row committed token count.  A non-None ``tree`` routes
+        the cycle through tree-structured speculation (draft a token tree,
+        prune per level, one merged target verify)."""
+        if tree is not None and len(chain) > 1:
+            return self._one_tree_cycle(chain, tree, request_id, seq,
+                                        seq_len, active)
         B = seq.shape[0]
         max_len = self.states.get(
             StateManager.key(self.target, request_id)).capacity
 
         # --- ensure chain members are synced (or re-prefill laggards) ----
-        prefixes = {}
-        for m in chain:
-            needed = self.gcap + 2 + W + len(chain)
-            self._ensure_capacity(m, request_id, needed, seq, seq_len,
-                                  max_len)
-            pfx, pval, gap = self._gap_prefix(m, request_id, seq, seq_len,
-                                              active)
-            if pfx is None:   # fell too far behind -> catch-up prefill
-                self.states.release(StateManager.key(m, request_id))
-                self._prefill_model(m, request_id, seq, seq_len, max_len)
-                pfx, pval, gap = self._gap_prefix(m, request_id, seq,
-                                                  seq_len, active)
-            prefixes[m] = (pfx, pval)
+        prefixes = self._sync_chain(chain, request_id,
+                                    self.gcap + 2 + W + len(chain),
+                                    seq, seq_len, active, max_len)
 
         # --- target-only chain: plain autoregressive step -----------------
         if len(chain) == 1:
@@ -398,6 +444,111 @@ class ChainRouter:
                 continue
             kb = int(k_N[b])
             seq[b, seq_len[b]:seq_len[b] + kb] = cand[b, :kb]
+            seq[b, seq_len[b] + kb] = next_token[b]
+            seq_len[b] += kb + 1
+        self.profiler.count("cycles")
+        self.profiler.count("committed", float(n_committed.sum()))
+        return n_committed
+
+    # ------------------------------------------------------------------
+    def _one_tree_cycle(self, chain: Tuple[str, ...], tree: TokenTree,
+                        request_id: str, seq: np.ndarray,
+                        seq_len: np.ndarray,
+                        active: np.ndarray) -> np.ndarray:
+        """One tree-structured speculative cycle (SpecInfer-style):
+
+          1. the draft model emits a token tree (static shape, level by
+             level, ancestor-masked attention);
+          2. every intermediate chain model verifies the WHOLE tree in one
+             pass and prunes the sub-trees it rejects (multi-level
+             collaboration: the target only considers surviving nodes);
+          3. the target's single merged pass accepts the deepest surviving
+             root-to-leaf prefix and yields the correction/bonus token;
+          4. every model settles its tree block by consensus: keep the
+             winning-path nodes all deeper levels also accepted, mask the
+             dead branches (ResolveTree = the tree RollbackProcessor).
+
+        Greedy mode commits exactly the target-only greedy stream (at most
+        one child per node can match the target argmax).  Pruning can only
+        drop candidates, never add them, so bit-equality survives any
+        intermediate pruning decisions."""
+        B = seq.shape[0]
+        N, D = tree.num_nodes, tree.depth_levels
+        max_len = self.states.get(
+            StateManager.key(self.target, request_id)).capacity
+
+        for m in chain:
+            assert self.pool.cfg(m).supports_tree, \
+                f"{m} cannot decode token trees"
+        prefixes = self._sync_chain(chain, request_id, self.gcap + 2 + N,
+                                    seq, seq_len, active, max_len)
+
+        # --- draft the tree ------------------------------------------------
+        m1 = chain[0]
+        pfx, pval = prefixes[m1]
+        cand, cprobs = self.executor.draft_tree(DraftTreeRequest(
+            model=m1, request_id=request_id, prefix_tokens=pfx,
+            prefix_valid=pval, tree=tree, active=active, greedy=self.greedy,
+            temperature=self.temperature, rng=self._next_rng()))
+
+        # --- per-level prune, then the target's merged verify --------------
+        node_valid = np.broadcast_to(active[:, None], (B, N)).copy()
+        accepts: List[np.ndarray] = []
+        producer = m1
+        res = None
+        for m in chain[1:]:
+            final = m == chain[-1]
+            pfx, pval = prefixes[m]
+            res = self.executor.verify_tree(VerifyTreeRequest(
+                model=m, request_id=request_id, prefix_tokens=pfx,
+                prefix_valid=pval, tree=tree, candidates=cand,
+                candidate_probs=cprobs, node_valid=node_valid,
+                active=active, greedy=self.greedy,
+                temperature=self.temperature, final=final,
+                rng=self._next_rng()))
+            accepts.append(np.asarray(res.accept))
+            if active.any():
+                # every tree level verifies the DRAFT's candidate_probs
+                # (no per-level re-splicing), so res.dtv measures the
+                # draft-vs-this-verifier divergence — attribute it to that
+                # pair, not to the adjacent chain edge
+                self.sims.update(m1, m, float(np.mean(res.dtv[active])))
+            self.profiler.count(f"accept.{producer}->{m}",
+                                float(np.sum(res.num_accepted[active])))
+            if not final:   # prune: mask the sub-trees this level rejected
+                node_valid = node_valid & np.asarray(res.accept)
+            producer = m
+
+        k_N = np.asarray(res.num_accepted)
+        path = np.asarray(res.path_nodes)
+        next_token = np.asarray(res.next_token)
+
+        # --- consensus resolve (tree analogue of RollbackProcessor) --------
+        # level j keeps the winning-path prefix that IT and every deeper
+        # level accepted: min over the per-level accepted depths along the
+        # target's winning path (the draft keeps the min over all levels).
+        counts = []
+        for acc in accepts:
+            onpath = np.take_along_axis(acc, path, axis=1).astype(np.int64)
+            counts.append(np.minimum(
+                np.sum(np.cumprod(onpath, axis=1), axis=1), k_N))
+        counts_arr = np.stack(counts, axis=0)        # (len(chain)-1, B)
+        for j, m in enumerate(chain):
+            c = (counts_arr.min(axis=0) if j == 0
+                 else counts_arr[j - 1:].min(axis=0))
+            c = np.where(active, c, 0).astype(np.int32)
+            self.executor.resolve_tree(ResolveTreeRequest(
+                model=m, request_id=request_id, tree=tree,
+                path_nodes=path, keep_len=c))
+
+        # --- commit the winning path + correction/bonus --------------------
+        path_tokens = np.take_along_axis(cand, path, axis=1)   # (B, D)
+        n_committed = np.where(active, k_N + 1, 0)
+        for b in range(B):
+            if not active[b]:
+                continue
+            kb = int(k_N[b])
+            seq[b, seq_len[b]:seq_len[b] + kb] = path_tokens[b, :kb]
             seq[b, seq_len[b] + kb] = next_token[b]
             seq_len[b] += kb + 1
         self.profiler.count("cycles")
@@ -503,21 +654,34 @@ class RouterSession:
         if self._choice is None or (r.adaptive
                                     and self.steps % r.reschedule_every == 0):
             if r.fixed_chain is not None:
-                self._choice = ChainChoice(r.fixed_chain,
-                                           r.fixed_window or 4, 0.0)
+                w = (r.fixed_tree.depth_levels if r.fixed_tree is not None
+                     else (r.fixed_window or 4))
+                self._choice = ChainChoice(r.fixed_chain, w, 0.0,
+                                           tree=r.fixed_tree)
             else:
                 self._choice = r.scheduler.get_optimal_chain()
         chain, W = self._choice.chain, self._choice.window
         self.chain_history.append((chain, W))
+        pre_active = self.active.copy()
+        gen_before = (self.seq_len - self.prompt_len).copy()
         t0 = _time.perf_counter()
         n_acc = r._one_cycle(chain, W, self.session_id, self.seq,
-                             self.seq_len, self.active)
+                             self.seq_len, self.active,
+                             tree=self._choice.tree)
         wall = _time.perf_counter() - t0
-        acc_mean = float(np.mean(n_acc[self.active]))
-        self.committed += int(n_acc.sum())
+        acc_mean = float(np.mean(n_acc[pre_active]))
         self.steps += 1
         r._apply_termination(self.seq, self.seq_len, self.prompt_len,
                              self.budget, self.active)
+        # acceptance diagnostics report the RAW speculative commit, but the
+        # session's committed counter only advances by tokens that SURVIVED
+        # termination (budget truncation / EOS cut): tree cycles commit
+        # several tokens at once, and counting the truncated overshoot let
+        # bulk generate's budget loop exit while rows were still active
+        survived = np.where(pre_active,
+                            (self.seq_len - self.prompt_len) - gen_before,
+                            0).astype(np.int64)
+        self.committed += int(survived.sum())
         return CycleReport(n_acc, wall, chain, W, acc_mean)
 
     def generated(self, slot: int) -> np.ndarray:

@@ -3,12 +3,14 @@
 The Executor is the data-plane dispatcher: it receives operation requests
 from the ChainRouter, routes them to the specialized processors
 (Prefill/Draft/Verify/Rollback, plus Insert/Retire for slot-level
-continuous batching), resolves models via the ModelPool and state via the
-StateManager, and wraps every call with PerformanceProfiler timing (the
-feedback loop of §4.6).
+continuous batching and DraftTree/VerifyTree/ResolveTree for
+tree-structured speculation), resolves models via the ModelPool and state
+via the StateManager, and wraps every call with PerformanceProfiler timing
+(the feedback loop of §4.6).
 
 All device computation goes through per-(model, op, shape) jitted callables
-cached here.
+cached here; tree programs additionally specialize on the static tree
+shape (one compile per (model, branching)).
 """
 from __future__ import annotations
 
@@ -21,9 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import verification as ver
+from ..kernels import ops as kops
+from ..models import kv_cache as kvc
 from .model_pool import ModelPool
 from .profiler import PerformanceProfiler
 from .state_manager import StateManager
+from .token_tree import TokenTree
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +78,54 @@ class RollbackRequest:
     model: str
     request_id: str
     r: np.ndarray                 # (B,) int32
+
+
+@dataclasses.dataclass
+class DraftTreeRequest:
+    """Tree-structured speculation: draft one token tree (static shape)
+    from the last committed token, level by level."""
+    model: str
+    request_id: str
+    prefix_tokens: np.ndarray     # (B, G+1) gap catch-up ++ t_last
+    prefix_valid: np.ndarray      # (B, G+1) bool
+    tree: TokenTree
+    active: np.ndarray            # (B,) bool
+    greedy: bool = True
+    temperature: float = 1.0
+    rng: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class VerifyTreeRequest:
+    """One merged verify pass over a drafted token tree.  ``node_valid``
+    carries upstream pruning (chain levels before this one); ``final``
+    marks the target level (sampling mode runs the multi-branch rejection
+    walk there instead of per-node prune coins)."""
+    model: str
+    request_id: str
+    prefix_tokens: np.ndarray     # (B, G+1)
+    prefix_valid: np.ndarray      # (B, G+1)
+    tree: TokenTree
+    candidates: np.ndarray        # (B, N) node tokens
+    candidate_probs: np.ndarray   # (B, N, V) producer dists
+    node_valid: np.ndarray        # (B, N) bool
+    active: np.ndarray            # (B,)
+    greedy: bool = True
+    temperature: float = 1.0
+    final: bool = True
+    rng: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class ResolveTreeRequest:
+    """Settle a model's speculative tree block: commit the winning path's
+    first ``keep_len`` nodes, mask every dead branch (consensus semantics
+    identical to the linear RollbackProcessor)."""
+    model: str
+    request_id: str
+    tree: TokenTree
+    path_nodes: np.ndarray        # (B, D) winning root->leaf node ids
+    keep_len: np.ndarray          # (B,) int32 — consensus depth to keep
 
 
 @dataclasses.dataclass
@@ -306,5 +359,188 @@ class Executor:
         with self.profiler.timed("rollback", req.model,
                                  tokens=int(req.r.sum())):
             state = self._rollback(req.model)(state, jnp.asarray(req.r))
+            jax.block_until_ready(state.write_ptr)
+        self.states.update(sid, state)
+
+    # ------------------------------------------------------------------
+    # Tree-structured speculation processors
+    # ------------------------------------------------------------------
+    def _draft_tree(self, model: str, tree: TokenTree, greedy: bool,
+                    temperature: float):
+        """One jitted program drafting the whole tree: the prefix pass plus
+        D level expansions (each level decodes all its nodes as one block
+        under the static ancestor mask).  Greedy expansion takes every
+        parent's top-b children via the fused vocab-tile kernel
+        (ops.draft_topk, argmax tie-compatible — branching-factor 1 is
+        bit-identical to the linear draft scan); sampling draws children
+        i.i.d. from the parent distribution (the multi-branch rejection
+        rule assumes independent draws)."""
+        key = ("drafttree", model, tree.branching, greedy, temperature)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        lm = self.pool.model(model)
+        D = tree.depth_levels
+        sizes = tree.level_sizes
+
+        @jax.jit
+        def f(params, state, prefix_tokens, prefix_valid, active, rng):
+            B = prefix_tokens.shape[0]
+            logits, state = lm.decode(params, state, prefix_tokens,
+                                      valid=prefix_valid & active[:, None],
+                                      logits_mode="all")
+            par_logits = logits[:, -1:]                  # (B, 1, V)
+            toks_all, probs_all = [], []
+            for d in range(D):
+                n_par = par_logits.shape[1]
+                bd = tree.branching[d]
+                V = par_logits.shape[-1]
+                lt = par_logits.astype(jnp.float32) / temperature
+                par_probs = jax.nn.softmax(lt, axis=-1)
+                if greedy:
+                    _, idx = kops.draft_topk(lt.reshape(B * n_par, V), bd)
+                    toks_d = idx.reshape(B, n_par * bd).astype(jnp.int32)
+                else:
+                    rng, kd = jax.random.split(rng)
+                    lt_rep = jnp.repeat(lt, bd, axis=1)  # (B, n_par*bd, V)
+                    toks_d = jax.random.categorical(
+                        kd, lt_rep, axis=-1).astype(jnp.int32)
+                probs_d = jnp.repeat(par_probs, bd, axis=1)
+                lg, state = lm.decode(
+                    params, state, toks_d,
+                    valid=jnp.broadcast_to(active[:, None], toks_d.shape),
+                    logits_mode="all",
+                    spec_depth=jnp.full((sizes[d],), d, jnp.int32),
+                    spec_attend=jnp.asarray(tree.level_attend(d)))
+                par_logits = lg
+                toks_all.append(toks_d)
+                probs_all.append(probs_d)
+            return (jnp.concatenate(toks_all, axis=1),
+                    jnp.concatenate(probs_all, axis=1), state)
+
+        self._jit_cache[key] = f
+        return f
+
+    def draft_tree(self, req: DraftTreeRequest):
+        """DraftTreeProcessor: returns (node tokens (B, N), producer dists
+        (B, N, V)) in tree-node order."""
+        params = self.pool.params(req.model)
+        sid = StateManager.key(req.model, req.request_id)
+        state = self.states.get(sid)
+        rng = req.rng if req.rng is not None else jax.random.PRNGKey(0)
+        f = self._draft_tree(req.model, req.tree, req.greedy,
+                             req.temperature)
+        import time as _time
+        t0 = _time.perf_counter()
+        toks, probs, state = f(params, state,
+                               jnp.asarray(req.prefix_tokens),
+                               jnp.asarray(req.prefix_valid),
+                               jnp.asarray(req.active), rng)
+        toks = jax.block_until_ready(toks)
+        dt = _time.perf_counter() - t0
+        # per-LEVEL wall time keyed by the full branching profile (meta
+        # block -> EMA key): a level forward decodes several sibling
+        # nodes, so feeding it into the per-token decode1 EMA would
+        # contaminate the linear cost model, and distinct shapes (even
+        # with equal node counts) must not share an EMA
+        self.profiler.record("decode_level", req.model,
+                             dt / req.tree.depth_levels,
+                             tokens=req.tree.num_nodes,
+                             block=req.tree.branching)
+        self.states.update(sid, state)
+        return np.asarray(toks), np.asarray(probs)
+
+    def _fwd_tree(self, model: str, tree: TokenTree, prefix_width: int):
+        """Jitted verify forward over [gap ++ t_last ++ tree nodes]: the
+        prefix part appends linearly, the node part carries depth
+        positions and the static ancestor-mask override."""
+        key = ("fwdtree", model, tree.branching, prefix_width)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        lm = self.pool.model(model)
+        N = tree.num_nodes
+        spec_depth = jnp.asarray(np.concatenate(
+            [np.full(prefix_width, -1, np.int32), tree.depth]))
+        spec_attend = jnp.asarray(np.concatenate(
+            [np.zeros((prefix_width, N), bool), tree.attend], axis=0))
+
+        @jax.jit
+        def f(params, state, tokens, valid):
+            return lm.decode(params, state, tokens, valid=valid,
+                             logits_mode="all", spec_depth=spec_depth,
+                             spec_attend=spec_attend)
+
+        self._jit_cache[key] = f
+        return f
+
+    def _verify_tree_math(self, tree: TokenTree, greedy: bool,
+                          temperature: float, final: bool):
+        key = ("treemath", tree.branching, greedy, temperature, final)
+        if key not in self._jit_cache:
+            def f(cands, vlogits, node_valid, cprobs, rng, active):
+                return ver.verify_tree(
+                    tree, cands, vlogits, node_valid,
+                    candidate_probs=cprobs, key=rng, greedy=greedy,
+                    temperature=temperature, active=active, final=final)
+            self._jit_cache[key] = jax.jit(f)
+        return self._jit_cache[key]
+
+    def verify_tree(self, req: VerifyTreeRequest):
+        """VerifyTreeProcessor: one forward over [gap ++ t_last ++ nodes],
+        tree acceptance rule, returns TreeVerifyResult (numpy)."""
+        params = self.pool.params(req.model)
+        sid = StateManager.key(req.model, req.request_id)
+        state = self.states.get(sid)
+        G1 = req.prefix_tokens.shape[1]
+        N = req.tree.num_nodes
+        active = jnp.asarray(req.active)
+        block = np.concatenate([req.prefix_tokens, req.candidates], axis=1)
+        bvalid = np.concatenate(
+            [req.prefix_valid, np.ones_like(req.candidates, bool)], axis=1)
+        bvalid = jnp.asarray(bvalid) & active[:, None]
+        fwd = self._fwd_tree(req.model, req.tree, G1)
+        with self.profiler.timed("verify", req.model, tokens=N,
+                                 block=N + 1):
+            logits, state = fwd(params, state, jnp.asarray(block), bvalid)
+            logits = jax.block_until_ready(logits)
+        self.states.update(sid, state)
+
+        vlogits = logits[:, G1 - 1:]                 # (B, N+1, V)
+        rng = req.rng if req.rng is not None else jax.random.PRNGKey(0)
+        fmath = self._verify_tree_math(req.tree, req.greedy,
+                                       req.temperature, req.final)
+        res = fmath(jnp.asarray(req.candidates), vlogits,
+                    jnp.asarray(req.node_valid),
+                    jnp.asarray(req.candidate_probs), rng, active)
+        return jax.tree.map(np.asarray, res)
+
+    def _resolve_tree(self, model: str, tree: TokenTree):
+        key = ("resolvetree", model, tree.branching)
+        if key not in self._jit_cache:
+            N, D = tree.num_nodes, tree.depth_levels
+
+            @jax.jit
+            def f(state, path_nodes, keep_len):
+                depth_ok = (jnp.arange(D, dtype=jnp.int32)[None, :]
+                            < keep_len[:, None])                   # (B, D)
+                onehot = ((path_nodes[..., None]
+                           == jnp.arange(N, dtype=jnp.int32)[None, None, :])
+                          & depth_ok[..., None])                   # (B, D, N)
+                keep = jnp.any(onehot, axis=1)                     # (B, N)
+                return kvc.resolve_tree(state, N, keep, keep_len)
+
+            self._jit_cache[key] = f
+        return self._jit_cache[key]
+
+    def resolve_tree(self, req: ResolveTreeRequest):
+        """ResolveTreeProcessor: consensus settle of the model's tree block
+        (the tree analogue of RollbackProcessor — mask arithmetic plus the
+        shared write-pointer rewind, no data movement)."""
+        sid = StateManager.key(req.model, req.request_id)
+        state = self.states.get(sid)
+        with self.profiler.timed("rollback", req.model,
+                                 tokens=int(req.keep_len.sum())):
+            state = self._resolve_tree(req.model, req.tree)(
+                state, jnp.asarray(req.path_nodes, jnp.int32),
+                jnp.asarray(req.keep_len, jnp.int32))
             jax.block_until_ready(state.write_ptr)
         self.states.update(sid, state)

@@ -43,6 +43,11 @@ class PerformanceProfiler:
 
     Keys used by the scheduler:
       ("decode1", m)        — per-token single-step decode time T_i
+      ("decode_level", m, branching) — per-level tree-draft forward time
+                              for one tree shape (a level decodes several
+                              sibling nodes at once, so it is NOT
+                              comparable to decode1, and distinct shapes
+                              must not share an EMA)
       ("verify", m, T)      — verify-pass wall time for block length T
       ("prefill", m)        — prefill time (chain-switch catch-up cost)
     """
@@ -77,6 +82,13 @@ class PerformanceProfiler:
     # ---- queries used by the scheduler --------------------------------
     def decode_time(self, model: str, default: float) -> float:
         return self.emas[("decode1", model)].get(default)
+
+    def level_time(self, model: str, branching: tuple,
+                   default: float) -> float:
+        """Tree-draft per-level forward time for one tree shape (falls
+        back to ``default`` — typically the linear decode time — until
+        that shape has run a cycle)."""
+        return self.emas[("decode_level", model, branching)].get(default)
 
     def verify_time(self, model: str, block: int,
                     default: float) -> float:

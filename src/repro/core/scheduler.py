@@ -1,8 +1,9 @@
 """ModelChainScheduler (paper §4.2, Algorithm 1, Eq. 7).
 
-Continuously selects the chain [M_1, …, M_N = M_t] (and the draft window W)
-minimizing the predicted effective latency per committed target token, from
-EMA-profiled per-model times and SimScore-derived acceptance probabilities.
+Continuously selects the chain [M_1, …, M_N = M_t] — plus the draft shape:
+a linear window W or a token-tree branching profile — minimizing the
+predicted effective latency per committed target token, from EMA-profiled
+per-model times and SimScore-derived acceptance probabilities.
 """
 from __future__ import annotations
 
@@ -12,14 +13,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .profiler import PerformanceProfiler
 from .similarity import SimilarityStore, acceptance_from_sim
+from .token_tree import TokenTree
 
 
 @dataclasses.dataclass(frozen=True)
 class ChainChoice:
     chain: Tuple[str, ...]          # model names, draft first, target last
-    window: int                     # W
+    window: int                     # W (tree depth when tree is set)
     predicted_t_eff: float          # seconds per committed target token
     table: Dict = dataclasses.field(default_factory=dict, compare=False)
+    tree: Optional[TokenTree] = None  # None = linear window draft
 
 
 def expected_accepted(alpha: float, w: float) -> float:
@@ -30,6 +33,22 @@ def expected_accepted(alpha: float, w: float) -> float:
     if alpha >= 1.0 - 1e-9:
         return w
     return alpha * (1.0 - alpha ** w) / (1.0 - alpha)
+
+
+def expected_tree_accepted(alpha: float, branching: Sequence[int]) -> float:
+    """E[accepted depth] for a top-b token tree under per-token acceptance
+    α: a level offering b candidates passes w.p. 1 - (1-α)^b and levels
+    compose, so E = Σ_d Π_{e<=d} (1 - (1-α)^{b_e}).  The branching-1 tree
+    reduces exactly to ``expected_accepted(α, W)`` — the linear window is
+    the degenerate tree."""
+    if alpha <= 1e-9:
+        return 0.0
+    alpha = min(alpha, 1.0)
+    surv, e = 1.0, 0.0
+    for b in branching:
+        surv *= 1.0 - (1.0 - alpha) ** int(b)
+        e += surv
+    return e
 
 
 class ModelChainScheduler:
@@ -50,6 +69,8 @@ class ModelChainScheduler:
                  capability: Dict[str, float],
                  max_chain_len: int = 4,
                  windows: Sequence[int] = (2, 3, 4, 6, 8),
+                 tree_shapes: Sequence = (),
+                 tree_capable: Optional[Dict[str, bool]] = None,
                  verify_overhead: float = 0.1,
                  switch_penalty_steps: float = 32.0,
                  default_decode_s: float = 0.05):
@@ -61,6 +82,10 @@ class ModelChainScheduler:
         self.capability = capability  # e.g. param count — sorts the pool
         self.max_chain_len = max_chain_len
         self.windows = tuple(windows)
+        # token-tree draft shapes joining the (chain, window) search space;
+        # a shape is eligible only for chains of tree-capable models
+        self.tree_shapes = tuple(TokenTree.parse(t) for t in tree_shapes)
+        self.tree_capable = tree_capable or {}
         self.nu = verify_overhead
         self.switch_penalty_steps = switch_penalty_steps
         self.default_decode_s = default_decode_s
@@ -80,7 +105,8 @@ class ModelChainScheduler:
 
     # ---- Eq. 7 predictor ------------------------------------------------
     def predict_t_eff(self, chain: Sequence[str], window: int,
-                      alphas: Optional[Sequence[float]] = None) -> float:
+                      alphas: Optional[Sequence[float]] = None,
+                      tree: Optional[TokenTree] = None) -> float:
         prof = self.profiler
         T = {m: prof.decode_time(m, self._default_time(m))
              for m in chain}
@@ -90,6 +116,24 @@ class ModelChainScheduler:
             alphas = [
                 acceptance_from_sim(self.sims.sim_score(chain[i], chain[i + 1]))
                 for i in range(len(chain) - 1)]
+
+        if tree is not None and not tree.is_linear:
+            # tree cycle: D sequential draft levels, every level verifies
+            # the whole N-node tree (pruning shrinks real work but the
+            # predictor stays conservative), commit = E[tree depth] + 1.
+            # Per-node acceptance through the pruning chain is approximated
+            # as the product of the per-level α's (independence).
+            D, N = tree.depth_levels, tree.num_nodes
+            a_bar = 1.0
+            for a in alphas:
+                a_bar *= a
+            cost = D * prof.level_time(chain[0], tree.branching,
+                                       T[chain[0]])
+            for j in range(1, len(chain)):
+                verify_default = T[chain[j]] * (1.0 + self.nu * N)
+                cost += prof.verify_time(chain[j], N + 1, verify_default)
+            committed = expected_tree_accepted(a_bar, tree.branching) + 1.0
+            return cost / max(committed, 1e-9)
 
         lam = float(window)          # candidate length entering level j+1
         cost = window * T[chain[0]]  # W sequential draft steps
@@ -117,18 +161,23 @@ class ModelChainScheduler:
         table = {}
         prev = self._last_choice.chain if self._last_choice else None
         for chain in self.candidate_chains():
-            for w in (self.windows if len(chain) > 1 else (1,)):
-                t = self.predict_t_eff(chain, w)
+            options = [(w, None)
+                       for w in (self.windows if len(chain) > 1 else (1,))]
+            if (len(chain) > 1 and self.tree_shapes
+                    and all(self.tree_capable.get(m, False) for m in chain)):
+                options += [(tr.depth_levels, tr) for tr in self.tree_shapes]
+            for w, tr in options:
+                t = self.predict_t_eff(chain, w, tree=tr)
                 if prev is not None and chain != prev:
                     # amortized catch-up prefill for newly joining models
                     joiners = set(chain) - set(prev)
                     pen = sum(self.profiler.prefill_time(m, 10 * self._default_time(m))
                               for m in joiners)
                     t = t + pen / self.switch_penalty_steps
-                table[(chain, w)] = t
+                table[(chain, w, tr)] = t
                 if best is None or t < best.predicted_t_eff:
-                    best = ChainChoice(chain, w, t)
+                    best = ChainChoice(chain, w, t, tree=tr)
         best = ChainChoice(best.chain, best.window, best.predicted_t_eff,
-                           table)
+                           table, tree=best.tree)
         self._last_choice = best
         return best

@@ -132,6 +132,201 @@ def verify_sampling(candidates: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Tree verification (SpecInfer-style token trees, one merged verify pass)
+# ---------------------------------------------------------------------------
+class TreeVerifyResult(NamedTuple):
+    """Outcome of verifying one speculative token tree.
+
+    Logit-row convention: the verify pass feeds ``[gap…, t_last, node_0 …
+    node_{N-1}]`` and keeps rows ``l_0 … l_N`` where ``l_0`` verifies the
+    ROOT nodes (it is t_last's next-token distribution) and ``l_{i+1}`` is
+    the distribution AFTER node ``i`` (verifies node i's children / is the
+    bonus row when node i ends the winning path).
+    """
+    accept: jnp.ndarray          # (B, N) bool — path-closed per-node accept
+    num_accepted: jnp.ndarray    # (B,) int32 — accepted depth k on the path
+    path_nodes: jnp.ndarray      # (B, D) int32 — winning root->leaf node ids
+    next_token: jnp.ndarray      # (B,) int32 — correction (k<D) / bonus
+    next_probs: jnp.ndarray      # (B, V) — dist next_token was drawn from
+    dtv: jnp.ndarray             # (B,) float32 — mean TV p vs q over nodes
+
+
+def _path_closure(attend: jnp.ndarray, match: jnp.ndarray) -> jnp.ndarray:
+    """accept[b, i] = every ancestor-or-self of i matched.  attend is the
+    tree's static (N, N) ancestor-or-self matrix."""
+    return jnp.all(~attend[None] | match[:, None, :], axis=-1)
+
+
+def _best_path(paths: jnp.ndarray, accept: jnp.ndarray):
+    """(L, D) static paths + (B, N) accept -> (k (B,), path_nodes (B, D)).
+
+    The winning path is the deepest accepted root-to-leaf prefix; argmax
+    tie-breaks to the first leaf in node order (deterministic)."""
+    acc_on_path = jnp.take(accept, paths, axis=1)            # (B, L, D)
+    depth_acc = jnp.sum(jnp.cumprod(acc_on_path.astype(jnp.int32), axis=-1),
+                        axis=-1)                             # (B, L)
+    k = jnp.max(depth_acc, axis=-1).astype(jnp.int32)
+    best_leaf = jnp.argmax(depth_acc, axis=-1)
+    return k, paths[best_leaf]
+
+
+def verify_tree(tree, candidates: jnp.ndarray,
+                verifier_logits: jnp.ndarray,
+                node_valid: jnp.ndarray,
+                candidate_probs: Optional[jnp.ndarray] = None,
+                key: Optional[jax.Array] = None,
+                greedy: bool = True,
+                temperature: float = 1.0,
+                active: Optional[jnp.ndarray] = None,
+                final: bool = True) -> TreeVerifyResult:
+    """Verify a drafted token tree in one pass.
+
+    candidates:      (B, N) node tokens (tree-node order)
+    verifier_logits: (B, N+1, V) — rows per the TreeVerifyResult convention
+    node_valid:      (B, N) — False = pruned by an earlier chain level (or
+                     inactive row); pruned nodes are force-rejected
+    candidate_probs: (B, N, V) — each node's *producer* distribution (the
+                     draft dist of its parent); required for sampling
+
+    greedy — a node is accepted iff its token equals the verifier argmax at
+    its parent row and its whole root path is accepted; the committed
+    winning path plus the correction/bonus token is bit-identical to
+    target-only greedy decoding (at most one child per node can match the
+    argmax, so the walk is deterministic).
+
+    sampling (``final=True``) — SpecInfer multi-branch rejection: walk from
+    the root; at each level try the surviving children in sibling order,
+    accepting child c w.p. min(1, p(c)/q(c)) and deflating the residual
+    ``p <- norm(max(p - q, 0))`` after each rejection; when a whole level
+    rejects, sample the correction from the final residual.  With i.i.d.
+    child draws from q this preserves the target distribution exactly for
+    draft->target chains; intermediate-level pruning makes deeper chains
+    SpecInfer-style approximate (documented in ARCHITECTURE.md).
+
+    sampling (``final=False``, the per-level *pruner*) — per-node
+    independent coins u < min(1, p/q), path-closed; only the accept matrix
+    is authoritative (next_token is informational).
+    """
+    B, N = candidates.shape
+    D = int(tree.depth_levels)
+    parent_rows = jnp.asarray(tree.parent + 1)               # (N,) logit rows
+    attend = jnp.asarray(tree.attend)
+    paths = jnp.asarray(tree.paths)
+    p_all = jax.nn.softmax(
+        verifier_logits.astype(jnp.float32)
+        / (1.0 if greedy else temperature), axis=-1)         # (B, N+1, V)
+
+    if greedy:
+        preds = jnp.argmax(verifier_logits, axis=-1)         # (B, N+1)
+        match = (candidates == preds[:, parent_rows]) & node_valid
+        accept = _path_closure(attend, match)
+        k, path_nodes = _best_path(paths, accept)
+        last = jnp.take_along_axis(
+            path_nodes, jnp.clip(k - 1, 0, D - 1)[:, None], axis=1)[:, 0]
+        pos = jnp.where(k > 0, last + 1, 0)                  # bonus row
+        next_token = jnp.take_along_axis(preds, pos[:, None], axis=1)[:, 0]
+        next_probs = jnp.take_along_axis(
+            p_all, pos[:, None, None], axis=1)[:, 0]
+    elif final:
+        accept, k, path_nodes, next_probs = _tree_walk_sampling(
+            tree, candidates, p_all, candidate_probs, node_valid, key)
+        k_tok, _ = jax.random.split(key)
+        next_token = jax.random.categorical(
+            k_tok, jnp.log(jnp.maximum(next_probs, 1e-30)))
+    else:
+        q_tok = jnp.take_along_axis(
+            candidate_probs.astype(jnp.float32),
+            candidates[..., None], axis=-1)[..., 0]          # (B, N)
+        p_par = jnp.take(p_all, parent_rows, axis=1)         # (B, N, V)
+        p_tok = jnp.take_along_axis(
+            p_par, candidates[..., None], axis=-1)[..., 0]
+        u = jax.random.uniform(key, (B, N))
+        coin = u < jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-20))
+        accept = _path_closure(attend, coin & node_valid)
+        k, path_nodes = _best_path(paths, accept)
+        last = jnp.take_along_axis(
+            path_nodes, jnp.clip(k - 1, 0, D - 1)[:, None], axis=1)[:, 0]
+        pos = jnp.where(k > 0, last + 1, 0)
+        next_probs = jnp.take_along_axis(
+            p_all, pos[:, None, None], axis=1)[:, 0]
+        next_token = jnp.argmax(next_probs, axis=-1).astype(jnp.int32)
+
+    if candidate_probs is not None:
+        p_par = jnp.take(p_all, parent_rows, axis=1)         # (B, N, V)
+        d = _dtv(p_par, candidate_probs.astype(jnp.float32))  # (B, N)
+        nv = node_valid.astype(jnp.float32)
+        dtv = (jnp.sum(d * nv, axis=-1)
+               / jnp.maximum(jnp.sum(nv, axis=-1), 1.0))
+    else:
+        dtv = jnp.zeros((B,), jnp.float32)
+
+    if active is not None:
+        k = jnp.where(active, k, 0)
+        next_token = jnp.where(active, next_token, 0)
+        accept = accept & active[:, None]
+    return TreeVerifyResult(accept, k.astype(jnp.int32),
+                            path_nodes.astype(jnp.int32),
+                            next_token.astype(jnp.int32), next_probs, dtv)
+
+
+def _tree_walk_sampling(tree, cand, p_all, q, node_valid, key):
+    """SpecInfer multi-branch rejection walk (vectorized over B, static
+    loops over depth x sibling rank).  Returns (accept (B, N) one-hot path
+    matrix, k (B,), path_nodes (B, D), final residual/bonus dist (B, V))."""
+    B, N = cand.shape
+    D = int(tree.depth_levels)
+    children = jnp.asarray(tree.children)                    # (N+1, max_b)
+    cur = jnp.zeros((B,), jnp.int32)                         # logit row
+    p_res = p_all[:, 0]
+    k = jnp.zeros((B,), jnp.int32)
+    done = jnp.zeros((B,), bool)
+    accept = jnp.zeros((B, N), bool)
+    keys = jax.random.split(key, sum(tree.branching) + 1)[1:]
+    ci = 0
+    path = []
+    for d in range(D):
+        bd = tree.branching[d]
+        kids = jnp.take(children, cur, axis=0)[:, :bd]       # (B, bd)
+        chosen = jnp.full((B,), -1, jnp.int32)
+        for c in range(bd):
+            node = kids[:, c]
+            tok = jnp.take_along_axis(cand, node[:, None], axis=1)[:, 0]
+            nv = jnp.take_along_axis(node_valid, node[:, None], axis=1)[:, 0]
+            q_c = jnp.take_along_axis(
+                q.astype(jnp.float32), node[:, None, None], axis=1)[:, 0]
+            p_tok = jnp.take_along_axis(p_res, tok[:, None], axis=1)[:, 0]
+            q_tok = jnp.take_along_axis(q_c, tok[:, None], axis=1)[:, 0]
+            u = jax.random.uniform(keys[ci], (B,))
+            ci += 1
+            open_ = (~done) & (chosen < 0)
+            acc = (open_ & nv
+                   & (u < jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-20))))
+            chosen = jnp.where(acc, node, chosen)
+            # rejected sibling: deflate the residual by its draft mass.
+            # Pruned siblings (node_valid False) were never offered a
+            # min(1, p/q) trial, so their mass must NOT be deflated.
+            rej = open_ & nv & ~acc
+            resid = jnp.maximum(p_res - q_c, 0.0)
+            rs = jnp.sum(resid, axis=-1, keepdims=True)
+            resid = jnp.where(rs > 1e-20, resid / jnp.maximum(rs, 1e-20),
+                              p_res)   # degenerate p<=q residual: keep p
+            p_res = jnp.where(rej[:, None], resid, p_res)
+        adv = chosen >= 0
+        # structural placeholder below the stop depth (never committed:
+        # resolve_tree only keeps depths < k)
+        path.append(jnp.where(adv, chosen, kids[:, 0]))
+        accept = accept | (jnp.arange(N, dtype=jnp.int32)[None, :]
+                           == chosen[:, None])
+        k = k + adv.astype(jnp.int32)
+        p_next = jnp.take_along_axis(
+            p_all, jnp.maximum(chosen + 1, 0)[:, None, None], axis=1)[:, 0]
+        p_res = jnp.where(adv[:, None], p_next, p_res)
+        cur = jnp.where(adv, chosen + 1, cur)
+        done = done | ~adv
+    return accept, k, jnp.stack(path, axis=1), p_res
+
+
+# ---------------------------------------------------------------------------
 # Candidate assembly between levels
 # ---------------------------------------------------------------------------
 def splice_candidates(candidates: jnp.ndarray,

@@ -1,9 +1,17 @@
-"""Pallas TPU kernel: masked single-token decode attention (flash-decode).
+"""Pallas TPU kernels: masked decode attention (flash-decode) — single
+token and tree-block variants.
 
 The paper's cache_mask (Eq. 8) is consumed INSIDE the kernel: invalid KV
 slots never contribute to the online softmax, so logical rollback costs
 nothing at attention time.  GQA: the g query heads sharing one KV head are
 processed together as the (g × BLK_S) MXU tile.
+
+Tree-structured speculation extends the same mask path: a cycle's T tree
+nodes decode as one query block with a PER-QUERY mask row (B, T, S) —
+ancestor-or-self over the tree slots (siblings share a RoPE position but
+must not attend each other), plain validity-causal everywhere else (see
+``layers.overlay_block_mask`` for the layout).  The single-token decode
+kernel is exactly the T=1 special case.
 
 Grid: (B, Hkv, S/BLK_S) — the minor S axis is sequential on TPU, so the
 (m, l, acc) accumulators live in revisited output blocks; the wrapper
@@ -90,3 +98,82 @@ def masked_decode_attention_pallas(q: jnp.ndarray, k: jnp.ndarray,
     l1 = l[..., :1]
     out = jnp.where(l1 > 0, acc / jnp.maximum(l1, 1e-30), 0.0)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tree-block decode attention: T queries, per-query ancestor mask
+# ---------------------------------------------------------------------------
+def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref,
+                      *, scale):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32) * scale        # (T, g, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)             # (BLK_S, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)             # (BLK_S, D)
+    msk = mask_ref[0]                                      # (T, BLK_S)
+    T, g, D = q.shape
+
+    scores = (q.reshape(T * g, D) @ k.T).reshape(T, g, -1)  # (T, g, BLK_S)
+    scores = jnp.where(msk[:, None, :], scores, NEG).reshape(T * g, -1)
+
+    m_old = m_ref[0, 0].reshape(T * g, -1)[:, :1]          # (T*g, 1)
+    m_new = jnp.maximum(m_old, jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.where(scores > NEG * 0.5, jnp.exp(scores - m_new), 0.0)
+    corr = jnp.where(m_old > NEG * 0.5, jnp.exp(m_old - m_new), 0.0)
+
+    l_old = l_ref[0, 0].reshape(T * g, -1)[:, :1]
+    l_new = l_old * corr + jnp.sum(p, axis=-1, keepdims=True)
+    l_ref[0, 0] = jnp.broadcast_to(l_new, (T * g, 128)).reshape(T, g, 128)
+    acc = acc_ref[0, 0].reshape(T * g, D)
+    acc_ref[0, 0] = (acc * corr + p @ v).reshape(T, g, D)
+    m_ref[0, 0] = jnp.broadcast_to(m_new, (T * g, 128)).reshape(T, g, 128)
+
+
+def masked_tree_attention_pallas(q: jnp.ndarray, k: jnp.ndarray,
+                                 v: jnp.ndarray, mask: jnp.ndarray,
+                                 scale: float | None = None,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """q: (B, T, H, D); k, v: (B, S, Hkv, D); mask: (B, T, S) per-query
+    (tree-ancestor rows over the speculative block, validity-causal rows
+    elsewhere).  S must be a BLK_S multiple and D 128-aligned (ops.py
+    pads).  T=1 with a (B, 1, S) mask reproduces the single-token kernel.
+    """
+    B, T, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, T, Hkv, g, D)
+    grid = (B, Hkv, S // BLK_S)
+
+    acc, m, l = pl.pallas_call(
+        functools.partial(_tree_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, 1, g, D), lambda b, h, s: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, BLK_S, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, BLK_S, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, T, BLK_S), lambda b, h, s: (b, 0, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, g, D), lambda b, h, s: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, T, g, 128), lambda b, h, s: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, T, g, 128), lambda b, h, s: (b, h, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, T, g, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, T, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, T, g, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, mask)
+
+    l1 = l[..., :1]
+    out = jnp.where(l1 > 0, acc / jnp.maximum(l1, 1e-30), 0.0)
+    # (B, Hkv, T, g, D) -> (B, T, H, D)
+    return out.swapaxes(1, 2).reshape(B, T, H, D).astype(q.dtype)

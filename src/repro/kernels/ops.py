@@ -59,6 +59,23 @@ def verify_row_stats(logits: jnp.ndarray, cand: jnp.ndarray,
     return am[:R], m[:R], s[:R], cl[:R]
 
 
+@partial(jax.jit, static_argnames=("k", "use_kernel"))
+def draft_topk(logits: jnp.ndarray, k: int, use_kernel: bool = True):
+    """logits: (R, V) -> (values (R, k), indices (R, k)).
+
+    Greedy tree-draft expansion: every parent node's top-k children in one
+    fused pass over vocab tiles.  Tie-breaking matches jnp.argmax (first
+    maximal index), so column 0 is bit-identical to linear greedy drafting.
+    """
+    if not use_kernel:
+        return ref.topk_ref(logits, k)
+    R, V = logits.shape
+    x = _pad_to(_pad_to(logits, _verify.BLK_V, 1, _verify.NEG),
+                _verify.BLK_R, 0, _verify.NEG)
+    vals, idx = _verify.topk_pallas(x, k, interpret=_INTERPRET)
+    return vals[:R], idx[:R]
+
+
 def greedy_accept_from_stats(cand, am, m, s, cl):
     """O(R) epilogue: greedy accept mask + p(cand) from the fused stats."""
     match = am == cand.astype(jnp.int32)
@@ -86,3 +103,28 @@ def masked_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     out = _attn.masked_decode_attention_pallas(
         qp, kp, vp, mp, scale=scale, interpret=_INTERPRET)
     return out[:, :, :D]
+
+
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("use_kernel",))
+def masked_tree_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          mask: jnp.ndarray,
+                          use_kernel: bool = True) -> jnp.ndarray:
+    """Tree-block decode attention: q: (B, T, H, D); k, v: (B, S, Hkv, D);
+    mask: (B, T, S) per-query rows (ancestor-or-self over the speculative
+    tree slots, validity-causal elsewhere) -> (B, T, H, D).
+
+    The linear decode step is the T=1 special case (same mask path)."""
+    if not use_kernel:
+        return ref.masked_tree_attention_ref(q, k, v, mask)
+    D = q.shape[-1]
+    scale = 1.0 / (D ** 0.5)     # scale by TRUE head dim before padding
+    qp = _pad_to(q, 128, 3, 0.0)
+    kp = _pad_to(k, 128, 3, 0.0)
+    vp = _pad_to(v, 128, 3, 0.0)
+    kp = _pad_to(kp, _attn.BLK_S, 1, 0.0)
+    vp = _pad_to(vp, _attn.BLK_S, 1, 0.0)
+    mp = _pad_to(mask, _attn.BLK_S, 2, False)
+    out = _attn.masked_tree_attention_pallas(
+        qp, kp, vp, mp, scale=scale, interpret=_INTERPRET)
+    return out[:, :, :, :D]

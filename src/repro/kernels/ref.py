@@ -66,3 +66,39 @@ def masked_decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
     p = jnp.where(jnp.any(mask, axis=-1)[:, None, None, None], p, 0.0)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
     return o.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# 4. Tree-block decode attention (per-query ancestor mask rows)
+# ---------------------------------------------------------------------------
+def masked_tree_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
+                              v: jnp.ndarray, mask: jnp.ndarray,
+                              scale: float | None = None) -> jnp.ndarray:
+    """q: (B, T, H, D); k, v: (B, S, Hkv, D); mask: (B, T, S) per-query.
+
+    The T=1 case with ``mask[:, 0]`` equals masked_decode_attention_ref."""
+    B, T, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, T, Hkv, g, D).astype(jnp.float32)
+    scores = jnp.einsum("bthgd,bshd->bthgs", qg,
+                        k.astype(jnp.float32)) * scale
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask[:, :, None, None, :], scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=-1)[:, :, None, None, None], p, 0.0)
+    o = jnp.einsum("bthgs,bshd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# 5. Row-wise top-k (greedy tree-draft expansion)
+# ---------------------------------------------------------------------------
+def topk_ref(logits: jnp.ndarray, k: int):
+    """(R, V) -> (values (R, k), indices (R, k)); ties resolve to the
+    first maximal index, matching jnp.argmax (stable argsort)."""
+    x = logits.astype(jnp.float32)
+    order = jnp.argsort(-x, axis=-1, stable=True)[:, :k].astype(jnp.int32)
+    vals = jnp.take_along_axis(x, order, axis=-1)
+    return vals, order

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused verification row statistics.
+"""Pallas TPU kernels: fused verification row statistics + draft top-k.
 
 Each speculative step verifies B·(W+1) rows of |V|-wide logits (|V| up to
 262k).  The naive path reads the logits 3×
@@ -9,8 +9,17 @@ ONE pass over vocab tiles:
 
 The acceptance rule itself (greedy match / rejection sampling on p(cand))
 is O(B·W) epilogue work done in plain jnp (see ops.verify_row_stats users).
+
+``topk_pallas`` serves tree-structured speculation: greedy tree drafting
+expands every parent node into its top-k children, which is a row-wise
+top-k over the same |V|-wide logits.  One pass over vocab tiles keeps a
+running (value, index) top-k per row (K is tiny and static), with
+argmax-compatible tie-breaking (first maximal index wins) so the k=1
+column is bit-identical to linear greedy drafting.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -78,3 +87,62 @@ def verify_stats_pallas(logits: jnp.ndarray, cand: jnp.ndarray,
         interpret=interpret,
     )(logits, cand2)
     return am[:, 0], m[:, 0], s[:, 0], cl[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Row-wise top-k over vocab tiles (greedy tree-draft expansion)
+# ---------------------------------------------------------------------------
+def _select_topk(vals, idx, K):
+    """(R, C) candidates -> (R, K) selected, first-maximal-index ties.
+    K and C are static and tiny; K rounds of masked argmax on the VPU."""
+    BIG = jnp.int32(2**30)
+    out_v, out_i = [], []
+    for _ in range(K):
+        vmax = jnp.max(vals, axis=-1, keepdims=True)
+        # among entries equal to the max, take the smallest index
+        imin = jnp.min(jnp.where(vals >= vmax, idx, BIG), axis=-1,
+                       keepdims=True)
+        out_v.append(vmax)
+        out_i.append(imin)
+        vals = jnp.where(idx == imin, NEG, vals)   # retire the winner
+    return jnp.concatenate(out_v, -1), jnp.concatenate(out_i, -1)
+
+
+def _topk_kernel(x_ref, v_ref, i_ref, *, K):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        v_ref[...] = jnp.full_like(v_ref, NEG)
+        i_ref[...] = jnp.zeros_like(i_ref)
+
+    x = x_ref[...].astype(jnp.float32)                   # (BLK_R, BLK_V)
+    base = j * BLK_V
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + base
+    tv, ti = _select_topk(x, col, K)                     # tile top-K
+    # merge with the running top-K: running entries carry SMALLER indices
+    # than anything in this tile, so putting them first preserves the
+    # first-maximal-index tie-break through the re-selection
+    mv = jnp.concatenate([v_ref[...], tv], axis=-1)      # (BLK_R, 2K)
+    mi = jnp.concatenate([i_ref[...], ti], axis=-1)
+    nv, ni = _select_topk(mv, mi, K)
+    v_ref[...] = nv
+    i_ref[...] = ni
+
+
+def topk_pallas(logits: jnp.ndarray, k: int, interpret: bool = True):
+    """logits: (R, V) padded to tile boundaries; returns
+    (values (R, k) f32, indices (R, k) i32), argmax tie-breaking."""
+    R, V = logits.shape
+    grid = (R // BLK_R, V // BLK_V)
+    vals, idx = pl.pallas_call(
+        functools.partial(_topk_kernel, K=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLK_R, BLK_V), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((BLK_R, k), lambda i, j: (i, 0)),
+                   pl.BlockSpec((BLK_R, k), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, k), jnp.float32),
+                   jax.ShapeDtypeStruct((R, k), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return vals, idx

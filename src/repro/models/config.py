@@ -110,6 +110,12 @@ class ModelConfig:
     def has_decode_step(self) -> bool:
         return True  # all assigned archs are decoder-bearing
 
+    @property
+    def supports_tree(self) -> bool:
+        """Tree-structured speculation needs per-position KV that can mask
+        dead branches; recurrent carries (SSM/hybrid) cannot branch."""
+        return self.arch_type in ("dense", "moe", "audio", "vlm")
+
     def param_count(self) -> int:
         """Analytic parameter count (used for MODEL_FLOPS roofline term)."""
         d, L, V = self.d_model, self.num_layers, self.vocab_size

@@ -61,18 +61,39 @@ def make_state(batch: int, max_len: int, layers: Dict[str, Any]) -> ModelState:
 # Logical append (all rows write the same physical slots [P, P+T))
 # ---------------------------------------------------------------------------
 def append_tokens(state: ModelState, tokens: jnp.ndarray,
-                  valid: Optional[jnp.ndarray] = None):
+                  valid: Optional[jnp.ndarray] = None,
+                  spec_depth: Optional[jnp.ndarray] = None):
     """Append T tokens per row at shared physical slots; returns
     (new_state, q_positions (B,T), slot_start ()).
 
     ``valid`` (B, T) bool marks which appended entries are logically valid
     (used when a batch row has already finished but the batch step still runs).
+
+    ``spec_depth`` (T,) int32 marks *speculative tree* entries: ``-1`` is a
+    normal committed-stream token (linear cumsum position, advances
+    ``length``), ``d >= 0`` is a tree node at depth ``d`` — its logical
+    position is ``post-linear length + d`` (siblings share a position) and
+    it does NOT advance ``length``; the block is later settled by
+    ``resolve_tree`` (commit the winning path, mask dead branches).  With
+    ``spec_depth=None`` the behaviour is bit-identical to the pre-tree code.
     """
     B, T = tokens.shape
     P = state.write_ptr
     if valid is None:
         valid = jnp.ones((B, T), jnp.bool_)
-    q_pos = state.length[:, None] + jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1
+    if spec_depth is None:
+        q_pos = (state.length[:, None]
+                 + jnp.cumsum(valid.astype(jnp.int32), axis=1) - 1)
+        adv = jnp.sum(valid, axis=1, dtype=jnp.int32)
+    else:
+        is_lin = (spec_depth < 0)[None, :]                       # (1, T)
+        lin_valid = valid & is_lin
+        lin_pos = (state.length[:, None]
+                   + jnp.cumsum(lin_valid.astype(jnp.int32), axis=1) - 1)
+        adv = jnp.sum(lin_valid, axis=1, dtype=jnp.int32)
+        base = state.length + adv                                # (B,)
+        spec_pos = base[:, None] + jnp.maximum(spec_depth, 0)[None, :]
+        q_pos = jnp.where(is_lin, lin_pos, spec_pos)
     q_pos = jnp.where(valid, q_pos, jnp.int32(2**30))  # invalid -> far future
     upd = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(buf, new, P, axis=1)
     new = dataclasses.replace(
@@ -80,7 +101,7 @@ def append_tokens(state: ModelState, tokens: jnp.ndarray,
         token_buf=upd(state.token_buf, tokens.astype(jnp.int32)),
         pos_buf=upd(state.pos_buf, q_pos.astype(jnp.int32)),
         mask=upd(state.mask, valid),
-        length=state.length + jnp.sum(valid, axis=1, dtype=jnp.int32),
+        length=state.length + adv,
         write_ptr=P + T,
     )
     return new, q_pos, P
@@ -114,6 +135,35 @@ def physical_reclaim(state: ModelState) -> ModelState:
 def rollback(state: ModelState, r: jnp.ndarray) -> ModelState:
     """Full paper rollback: logical mask update then physical reclaim."""
     return physical_reclaim(logical_rollback(state, r))
+
+
+def resolve_tree(state: ModelState, num_nodes: int, keep: jnp.ndarray,
+                 add_len: jnp.ndarray) -> ModelState:
+    """Settle a speculative tree block (the LAST ``num_nodes`` physical
+    slots, appended with ``spec_depth``): keep the winning-path nodes, mask
+    every dead branch, and advance each row's logical length by the number
+    of kept nodes.
+
+    Same machinery as logical rollback — pure mask arithmetic plus the
+    write-pointer rewind, zero data movement.  Dead-branch holes inside the
+    block stay masked and are reclaimed by ``defragment`` under capacity
+    pressure, exactly like divergent-acceptance holes in linear mode.
+
+    keep:    (B, N) bool — True for nodes on the row's committed path
+    add_len: (B,) int32  — kept-path length (0 for inactive rows)
+    """
+    B, S = state.token_buf.shape
+    start = state.write_ptr - num_nodes
+    slot_ids = jnp.arange(S, dtype=jnp.int32)[None, :]
+    in_block = (slot_ids >= start) & (slot_ids < state.write_ptr)
+    keep_full = jnp.zeros((B, S), jnp.bool_)
+    keep_full = jax.lax.dynamic_update_slice(keep_full, keep, (0, start))
+    new = dataclasses.replace(
+        state,
+        mask=jnp.where(in_block, state.mask & keep_full, state.mask),
+        length=state.length + add_len.astype(jnp.int32),
+    )
+    return physical_reclaim(new)
 
 
 def free_rows(state: ModelState, rows, layer_axes=None) -> ModelState:

@@ -143,6 +143,35 @@ def build_attention_mask(cache_mask: jnp.ndarray,
     return m
 
 
+def overlay_block_mask(m: jnp.ndarray, cache_mask: jnp.ndarray,
+                       block_attend: jnp.ndarray,
+                       region_start: jnp.ndarray) -> jnp.ndarray:
+    """Overwrite the attention-mask columns of a speculative tree region
+    with a static per-query override (tree-structured speculation).
+
+    Tree nodes share logical positions with their siblings, so the purely
+    positional causal mask of ``build_attention_mask`` would let a node
+    attend to non-ancestors at shallower depth.  The override replaces the
+    mask columns of the last-written tree slots with the tree's static
+    ancestor-or-self matrix (rows for non-tree queries in the same block
+    are all-False there, which matches what position causality yields).
+
+    m:            (B, T, S) mask from ``build_attention_mask``
+    cache_mask:   (B, S) post-append logical validity (gates retired /
+                  inactive rows' tree slots out of the override too)
+    block_attend: (T, R) static override for the region columns
+    region_start: () int32 — first physical slot of the region; the region
+                  is the R slots ``[region_start, region_start + R)``
+    """
+    T, R = block_attend.shape
+    B = m.shape[0]
+    region_valid = jax.lax.dynamic_slice(
+        cache_mask, (jnp.int32(0), region_start), (B, R))        # (B, R)
+    ov = block_attend[None, :, :] & region_valid[:, None, :]     # (B, T, R)
+    return jax.lax.dynamic_update_slice(
+        m, ov, (jnp.int32(0), jnp.int32(0), region_start))
+
+
 def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   mask: jnp.ndarray, attn_softcap: float = 0.0,
                   scale: float | None = None) -> jnp.ndarray:

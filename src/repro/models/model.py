@@ -92,8 +92,17 @@ class LanguageModel:
             logits_mode=logits_mode, **kw)
 
     def decode(self, params, state, tokens, valid=None, logits_mode="all",
-               **extras):
+               spec_depth=None, spec_attend=None, **extras):
         kw, state = self._prep(params, state, tokens, extras)
+        if spec_depth is not None or spec_attend is not None:
+            # tree-structured speculation needs a per-position cache whose
+            # branches can be masked independently; recurrent carries
+            # (SSM/hybrid) cannot branch, so those archs stay linear-only
+            if not self.cfg.supports_tree:
+                raise NotImplementedError(
+                    f"{self.cfg.arch_type} models cannot decode token trees")
+            kw["spec_depth"] = spec_depth
+            kw["spec_attend"] = spec_attend
         return self.mod.forward_cached(
             params, self.cfg, state, tokens, valid=valid,
             logits_mode=logits_mode, **kw)

@@ -340,10 +340,17 @@ def _moe_block(pl, cfg, x, *, k_cached, v_cached, mask, q_pos, theta,
 
 
 def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
-                   tokens, valid=None, logits_mode="all", **_ignored):
-    state, q_pos, slot = kvc.append_tokens(state, tokens, valid)
-    x = tf._embed(params, cfg, tokens)
+                   tokens, valid=None, logits_mode="all",
+                   spec_depth=None, spec_attend=None, **_ignored):
+    state, q_pos, slot = kvc.append_tokens(state, tokens, valid,
+                                           spec_depth=spec_depth)
     mask = nn.build_attention_mask(state.mask, state.pos_buf, q_pos, window=0)
+    if spec_attend is not None:   # tree speculation: ancestor-mask override
+        T = tokens.shape[1]
+        mask = nn.overlay_block_mask(mask, state.mask,
+                                     jnp.asarray(spec_attend),
+                                     slot + T - spec_attend.shape[1])
+    x = tf._embed(params, cfg, tokens)
     theta = jnp.float32(cfg.rope_theta)
 
     def body(x, s):

@@ -264,12 +264,24 @@ def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
                    valid: Optional[jnp.ndarray] = None,
                    input_embeds: Optional[jnp.ndarray] = None,
                    mrope_positions: Optional[jnp.ndarray] = None,
-                   logits_mode: str = "all"):
+                   logits_mode: str = "all",
+                   spec_depth: Optional[jnp.ndarray] = None,
+                   spec_attend: Optional[jnp.ndarray] = None):
     """Append T tokens, run all layers, return (logits, new_state).
 
     logits_mode: 'all' -> (B,T,V); 'last' -> (B,V) at each row's last valid.
+
+    Tree-structured speculation: ``spec_depth`` (T,) marks tree entries of
+    the block (-1 = committed-stream token; d >= 0 = tree node at depth d,
+    positioned at post-linear length + d) and ``spec_attend`` (T, R) is the
+    static ancestor mask overriding the attention columns of the cycle's
+    tree region — the LAST R physical slots after this append (earlier
+    draft levels of the same cycle sit contiguously before this block).
+    The override also applies to sliding-window layers: tree depths are
+    tiny relative to any real window, so ancestors are never out-of-window.
     """
-    state, q_pos, slot = kvc.append_tokens(state, tokens, valid)
+    state, q_pos, slot = kvc.append_tokens(state, tokens, valid,
+                                           spec_depth=spec_depth)
     B, T = tokens.shape
     x = input_embeds if input_embeds is not None else _embed(params, cfg, tokens)
     if cfg.learned_positions:
@@ -281,6 +293,14 @@ def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
     m_win = (nn.build_attention_mask(state.mask, kv_pos, q_pos,
                                      window=cfg.sliding_window)
              if cfg.sliding_window > 0 else m_full)
+    if spec_attend is not None:
+        region_start = slot + T - spec_attend.shape[1]
+        m_full = nn.overlay_block_mask(m_full, state.mask,
+                                       jnp.asarray(spec_attend), region_start)
+        if cfg.sliding_window > 0:
+            m_win = nn.overlay_block_mask(m_win, state.mask,
+                                          jnp.asarray(spec_attend),
+                                          region_start)
     if mrope_positions is None:
         q_pos3 = jnp.repeat(q_pos[..., None], 3, axis=-1)
     else:

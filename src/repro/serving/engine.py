@@ -95,9 +95,10 @@ class ServingEngine:
         # and, as a last resort, rebuilds states under capacity pressure)
         router = self._router
         lmax = max(len(r.prompt) + 2 * r.max_new_tokens + 2 for r in reqs)
-        w_max = max(router.scheduler.windows)
+        # max_block covers the widest per-cycle append: a linear window or
+        # a whole token tree (tree mode appends all N nodes per cycle)
         max_len = 2 * lmax + router.gcap + \
-            (w_max + router.scheduler.max_chain_len) * 4
+            (router.max_block + router.scheduler.max_chain_len) * 4
         # pow-2 capacity buckets: session state shapes (and thus every
         # jitted program) are shared across workloads of similar size
         # instead of recompiling per run

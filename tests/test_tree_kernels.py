@@ -1,0 +1,88 @@
+"""Tree-speculation kernels vs their pure-jnp oracles (interpret mode on
+CPU).  Kept hypothesis-free so the suite runs everywhere — unlike
+tests/test_kernels.py, which importorskips hypothesis at module level."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Tree-block attention kernel (per-query ancestor mask rows)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,S,H,Hkv,D,dtype", [
+    (2, 6, 128, 4, 2, 64, jnp.float32),
+    (1, 10, 700, 8, 8, 128, jnp.float32),   # unaligned S
+    (3, 4, 300, 48, 1, 128, jnp.float32),   # MQA
+    (2, 7, 512, 8, 4, 80, jnp.bfloat16),    # head_dim pad to 128
+])
+def test_tree_attention_matches_ref(B, T, S, H, Hkv, D, dtype):
+    kq, kk, kv, km = jax.random.split(KEY, 4)
+    q = jax.random.normal(kq, (B, T, H, D)).astype(dtype)
+    k = jax.random.normal(kk, (B, S, Hkv, D)).astype(dtype)
+    v = jax.random.normal(kv, (B, S, Hkv, D)).astype(dtype)
+    mask = jax.random.bernoulli(km, 0.6, (B, T, S))
+    got = ops.masked_tree_attention(q, k, v, mask)
+    want = ref.masked_tree_attention_ref(q, k, v, mask)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_tree_attention_t1_equals_decode_kernel():
+    """The single-token decode kernel is the T=1 special case."""
+    kq, kk, kv, km = jax.random.split(KEY, 4)
+    B, S, H, Hkv, D = 2, 256, 4, 2, 64
+    q = jax.random.normal(kq, (B, 1, H, D))
+    k = jax.random.normal(kk, (B, S, Hkv, D))
+    v = jax.random.normal(kv, (B, S, Hkv, D))
+    mask = jax.random.bernoulli(km, 0.7, (B, 1, S))
+    tree = ops.masked_tree_attention(q, k, v, mask)[:, 0]
+    dec = ops.masked_decode_attention(q[:, 0], k, v, mask[:, 0])
+    np.testing.assert_allclose(np.asarray(tree), np.asarray(dec),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tree_attention_fully_masked_row_is_zero():
+    q = jax.random.normal(KEY, (1, 3, 4, 64))
+    k = jax.random.normal(KEY, (1, 256, 2, 64))
+    v = jax.random.normal(KEY, (1, 256, 2, 64))
+    mask = jnp.zeros((1, 3, 256), bool).at[:, 1].set(True)
+    out = ops.masked_tree_attention(q, k, v, mask)
+    np.testing.assert_allclose(out[0, 0], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[0, 2], 0.0, atol=1e-6)
+    assert float(jnp.max(jnp.abs(out[0, 1]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Draft top-k kernel (greedy tree expansion)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,V,k", [
+    (4, 61, 1), (8, 512, 2), (5, 2048, 3), (3, 2100, 4), (1, 300, 2),
+])
+def test_draft_topk_matches_ref(R, V, k):
+    x = jax.random.normal(KEY, (R, V)) * 2
+    gv, gi = ops.draft_topk(x, k)
+    wv, wi = ref.topk_ref(x, k)
+    np.testing.assert_allclose(gv, wv, rtol=1e-6)
+    np.testing.assert_array_equal(gi, wi)
+
+
+def test_draft_topk_tie_breaking_matches_argmax():
+    """Duplicated maxima resolve to the FIRST index — the k=1 column must
+    equal jnp.argmax bit-for-bit (linear greedy drafting parity)."""
+    x = np.zeros((3, 400), np.float32)
+    x[0, [7, 300]] = 5.0          # duplicate max
+    x[1, [2, 3]] = 1.5            # duplicates inside one tile
+    x[2, :] = -1.0                # all-equal row
+    xj = jnp.asarray(x)
+    _, gi = ops.draft_topk(xj, 2)
+    np.testing.assert_array_equal(
+        np.asarray(gi)[:, 0], np.asarray(jnp.argmax(xj, -1)))
+    wv, wi = ref.topk_ref(xj, 2)
+    np.testing.assert_array_equal(gi, wi)

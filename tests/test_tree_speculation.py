@@ -1,0 +1,228 @@
+"""Tree-structured multi-level speculation (SpecInfer-style token trees).
+
+Key guarantees under test:
+  - branching-factor-1 tree decode is BIT-IDENTICAL to the existing linear
+    greedy path (the linear window is the degenerate tree);
+  - multi-branch trees still commit exactly the target-only greedy stream
+    (pruning/branching change *when* tokens arrive, never *which*), and
+    accept at least as many tokens per cycle as the equal-depth linear
+    draft on the same seed (the tree contains the linear top-1 path);
+  - per-level pruning (3-model chains) preserves bit-equality;
+  - tree state resolution (commit winning path, mask dead branches) keeps
+    every model's cache consistent with the committed stream.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChainRouter, ModelPool, TokenTree
+from repro.core import verification as ver
+from repro.models import ModelConfig
+from repro.models import kv_cache as kvc
+from repro.models.model import LanguageModel
+
+
+@pytest.fixture(scope="module")
+def pool():
+    # same tiny configs as tests/test_equivalence.py
+    p = ModelPool()
+    for (n, L, d, s) in [("m68", 2, 32, 1), ("m1b", 3, 48, 2),
+                         ("m7b", 4, 64, 3)]:
+        cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
+                          d_model=d, num_heads=4, num_kv_heads=2,
+                          d_ff=2 * d, vocab_size=61, dtype=jnp.float32)
+        lm = LanguageModel(cfg)
+        params, axes = lm.init(jax.random.PRNGKey(s))
+        p.register(cfg, params=params, param_axes=axes)
+    return p
+
+
+@pytest.fixture(scope="module")
+def reference(pool):
+    prompt = np.array(jax.random.randint(jax.random.PRNGKey(0),
+                                         (3, 7), 0, 61))
+    plens = np.array([7, 5, 6])
+    r = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                    fixed_chain=("m7b",), fixed_window=1)
+    ref = r.generate(prompt, plens, 14, request_id="ref")
+    return prompt, plens, ref
+
+
+# ---------------------------------------------------------------------------
+# TokenTree structure
+# ---------------------------------------------------------------------------
+def test_token_tree_structure():
+    t = TokenTree((2, 2, 1))
+    assert t.num_nodes == 10 and t.depth_levels == 3
+    assert t.level_sizes == (2, 4, 4)
+    np.testing.assert_array_equal(
+        t.parent, [-1, -1, 0, 0, 1, 1, 2, 3, 4, 5])
+    # every path walks parent links root -> leaf
+    for row in t.paths:
+        for d in range(1, len(row)):
+            assert t.parent[row[d]] == row[d - 1]
+    # ancestor mask: self + transitive parents, nothing else
+    assert t.attend[7, 0] and t.attend[7, 3] and t.attend[7, 7]
+    assert not t.attend[7, 1] and not t.attend[7, 2] and not t.attend[2, 3]
+    # linear degenerate case
+    lin = TokenTree.linear(4)
+    assert lin.is_linear and lin.num_nodes == 4
+    np.testing.assert_array_equal(lin.paths, [[0, 1, 2, 3]])
+    assert TokenTree.parse("2x2x1") == t and str(t) == "2x2x1"
+
+
+def test_verify_tree_branch1_matches_linear_rule():
+    """The tree greedy rule on a branching-1 tree IS verify_greedy."""
+    rng = np.random.default_rng(0)
+    B, W, V = 3, 4, 17
+    tree = TokenTree.linear(W)
+    cand = jnp.asarray(rng.integers(0, V, (B, W)), jnp.int32)
+    logits = jnp.asarray(rng.standard_normal((B, W + 1, V)), jnp.float32)
+    lin = ver.verify_greedy(cand, logits)
+    tr = ver.verify_tree(tree, cand, logits, jnp.ones((B, W), bool))
+    np.testing.assert_array_equal(lin.num_accepted, tr.num_accepted)
+    np.testing.assert_array_equal(lin.next_token, tr.next_token)
+    np.testing.assert_allclose(lin.next_probs, tr.next_probs, rtol=1e-6)
+
+
+def test_verify_tree_picks_deepest_surviving_path():
+    tree = TokenTree((2, 1))          # nodes: roots 0,1; children 2,3
+    V = 5
+    lg = np.full((1, tree.num_nodes + 1, V), -5.0, np.float32)
+    lg[0, 0, 2] = 5.0                 # t_last argmax: token 2
+    lg[0, 2, 4] = 5.0                 # after node 1: argmax token 4
+    lg[0, 4, 3] = 5.0                 # after node 3: bonus argmax 3
+    cand = jnp.asarray([[9, 2, 7, 4]], jnp.int32)   # node1=2 ✓, node3=4 ✓
+    res = ver.verify_tree(tree, cand, jnp.asarray(lg),
+                          jnp.ones((1, tree.num_nodes), bool))
+    assert int(res.num_accepted[0]) == 2
+    np.testing.assert_array_equal(res.path_nodes[0], [1, 3])
+    assert int(res.next_token[0]) == 3
+    # pruning node 1 kills the whole surviving path
+    nv = jnp.asarray([[True, False, True, True]])
+    res2 = ver.verify_tree(tree, cand, jnp.asarray(lg), nv)
+    assert int(res2.num_accepted[0]) == 0
+    assert int(res2.next_token[0]) == 2   # correction = t_last argmax
+
+
+def test_resolve_tree_masks_dead_branches():
+    st = kvc.make_state(2, 16, {})
+    toks = jnp.arange(6, dtype=jnp.int32).reshape(2, 3)
+    st, _, _ = kvc.append_tokens(st, toks)                 # 3 committed
+    tree_toks = jnp.ones((2, 4), jnp.int32)
+    sd = jnp.array([0, 0, 1, 1], jnp.int32)                # (2,1) tree
+    st, qp, _ = kvc.append_tokens(st, tree_toks, spec_depth=sd)
+    # siblings share positions; length untouched by speculative entries
+    np.testing.assert_array_equal(qp, [[3, 3, 4, 4], [3, 3, 4, 4]])
+    np.testing.assert_array_equal(st.length, [3, 3])
+    keep = jnp.array([[True, False, True, False],
+                      [False, True, False, True]])
+    st = kvc.resolve_tree(st, 4, keep, jnp.array([2, 2], jnp.int32))
+    np.testing.assert_array_equal(st.length, [5, 5])
+    np.testing.assert_array_equal(
+        np.asarray(st.mask[:, 3:7]),
+        [[True, False, True, False], [False, True, False, True]])
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: bit-equality + acceptance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(1, 1), (1, 1, 1, 1)])
+def test_branch1_tree_bit_identical_to_linear(pool, reference, shape):
+    prompt, plens, ref = reference
+    lin = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                      fixed_chain=("m68", "m7b"), fixed_window=len(shape)
+                      ).generate(prompt, plens, 14, request_id="lin")
+    tr = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                     fixed_chain=("m68", "m7b"), fixed_tree=shape
+                     ).generate(prompt, plens, 14, request_id="tr")
+    for b in range(3):
+        np.testing.assert_array_equal(tr.generated[b], ref.generated[b])
+        np.testing.assert_array_equal(tr.generated[b], lin.generated[b])
+
+
+@pytest.mark.parametrize("chain,shape", [
+    (("m68", "m7b"), (2, 2, 1)),
+    (("m68", "m7b"), (3, 1, 1)),
+    (("m68", "m1b", "m7b"), (2, 1, 1)),   # per-level pruning
+])
+def test_multibranch_tree_bit_identical(pool, reference, chain, shape):
+    prompt, plens, ref = reference
+    out = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                      fixed_chain=chain, fixed_tree=shape
+                      ).generate(prompt, plens, 14, request_id="mb")
+    for b in range(3):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
+
+
+def test_tree_accepts_at_least_linear(pool, reference):
+    """Equal-depth A/B on the same seed: the drafted tree contains the
+    linear top-1 chain as a sub-path, so per cycle it can only accept at
+    least as much; over a whole generation that shows up as <= steps and
+    >= mean accepted length."""
+    prompt, plens, _ = reference
+    lin = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                      fixed_chain=("m68", "m7b"), fixed_window=3
+                      ).generate(prompt, plens, 14, request_id="l")
+    tr = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                     fixed_chain=("m68", "m7b"), fixed_tree=(2, 2, 1)
+                     ).generate(prompt, plens, 14, request_id="t")
+    assert tr.steps <= lin.steps
+    assert (np.mean(tr.acceptance_lengths)
+            >= np.mean(lin.acceptance_lengths) - 1e-9)
+
+
+def test_tree_adaptive_scheduler_equivalence(pool, reference):
+    """Tree shapes join the adaptive search space without breaking the
+    output-quality guarantee, and the scheduler's table prices them."""
+    prompt, plens, ref = reference
+    r = ChainRouter(pool, "m7b", greedy=True, adaptive=True,
+                    tree_shapes=((2, 1, 1), (2, 2, 1)))
+    out = r.generate(prompt, plens, 14, request_id="ad")
+    for b in range(3):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
+    choice = r.scheduler.get_optimal_chain()
+    trees_priced = [tr for (_, _, tr) in choice.table if tr is not None]
+    assert trees_priced, "no tree candidates in the scheduler table"
+
+
+def test_tree_twin_models_accept_full_depth():
+    """Greedy twin draft==target accepts the whole winning path + bonus;
+    sampling twins accept the first sibling surely (p == q), so both modes
+    must commit depth+1 per cycle."""
+    p = ModelPool()
+    cfg = ModelConfig(name="twin-a", arch_type="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, dtype=jnp.float32)
+    lm = LanguageModel(cfg)
+    params, axes = lm.init(jax.random.PRNGKey(5))
+    p.register(cfg, params=params, param_axes=axes)
+    p.register(dc.replace(cfg, name="twin-b"), params=params,
+               param_axes=axes)
+    prompt = np.array(jax.random.randint(jax.random.PRNGKey(3),
+                                         (2, 6), 0, 61))
+    plens = np.array([6, 6])
+    g = ChainRouter(p, "twin-b", greedy=True, adaptive=False,
+                    fixed_chain=("twin-a", "twin-b"), fixed_tree=(2, 1, 1)
+                    ).generate(prompt, plens, 12, request_id="g")
+    assert np.mean(g.acceptance_lengths) >= 3.9       # D + bonus = 4
+    s = ChainRouter(p, "twin-b", greedy=False, adaptive=False,
+                    fixed_chain=("twin-a", "twin-b"), fixed_tree=(2, 2, 1)
+                    ).generate(prompt, plens, 12, request_id="s")
+    assert np.mean(s.acceptance_lengths) >= 3.9
+    for out in (g, s):
+        for gen in out.generated:
+            assert ((gen >= 0) & (gen < 61)).all()
+
+
+def test_tree_rejected_for_recurrent_archs(pool):
+    cfg = ModelConfig(name="ssm-x", arch_type="ssm", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=61, dtype=jnp.float32)
+    assert not cfg.supports_tree
+    with pytest.raises(AssertionError):
+        ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                    fixed_chain=("m7b",), fixed_tree=(2, 1))
