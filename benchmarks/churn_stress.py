@@ -1,0 +1,139 @@
+"""Capacity-stress churn benchmark: one long-lived slot plus admission
+churn — the workload that exhausted the contiguous shared-pointer KV cache
+(forced defragments, full reprefill rebuilds on the hot path).
+
+Paged mode must finish with ZERO ``defrag.*`` / ``reprefill.*`` escape
+counters and bounded pool usage; the contiguous A/B on the same sizing
+shows the pathology.  Run as a CI smoke (``--assert`` exits nonzero if the
+paged run trips an escape hatch or the streams diverge from target-only
+greedy decoding).
+
+    PYTHONPATH=src python -m benchmarks.churn_stress --assert
+
+Output CSV: churn,<mode>,<cycles>,<defrags>,<reprefills>,<peak_slots>,
+<committed>,<wall_s>.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ChainRouter, ModelPool
+from repro.core.state_manager import StateManager
+from repro.models import ModelConfig
+from repro.models import kv_cache as kvc
+from repro.models.model import LanguageModel
+
+
+def tiny_pool() -> ModelPool:
+    p = ModelPool()
+    for (n, L, d, s) in [("s", 2, 32, 1), ("t", 3, 48, 2)]:
+        cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
+                          d_model=d, num_heads=4, num_kv_heads=2,
+                          d_ff=2 * d, vocab_size=64, dtype=jnp.float32)
+        lm = LanguageModel(cfg)
+        params, axes = lm.init(jax.random.PRNGKey(s))
+        p.register(cfg, params=params, param_axes=axes)
+    return p
+
+
+def run_churn(pool: ModelPool, paged: bool, n_shorts: int, long_budget: int,
+              max_len: int) -> Tuple[List[np.ndarray], Dict, float, int]:
+    rng = np.random.default_rng(7)
+    long_prompt = rng.integers(1, 64, size=8).astype(np.int64)
+    shorts = [rng.integers(1, 64, size=6).astype(np.int64)
+              for _ in range(n_shorts)]
+    router = ChainRouter(pool, "t", adaptive=False, fixed_chain=("s", "t"),
+                         fixed_window=3, paged=paged)
+    sess = router.start_session(2, max_len, session_id="churn")
+    sid = StateManager.key("t", "churn")
+    peak = 0
+
+    def track():
+        nonlocal peak
+        st = router.states.get(sid)
+        used = (int(kvc.blocks_in_use(st)) * st.block_size
+                if isinstance(st, kvc.PagedModelState) else int(st.write_ptr))
+        peak = max(peak, used)
+
+    t0 = time.perf_counter()
+    sess.admit(0, long_prompt, long_budget)
+    outs = []
+    for sp in shorts:
+        sess.admit(1, sp, 4)
+        while sess.active[1]:
+            sess.run_cycle()
+            track()
+        outs.append(sess.retire(1))
+    while sess.active[0]:
+        sess.run_cycle()
+        track()
+    outs.insert(0, sess.retire(0))
+    wall = time.perf_counter() - t0
+    counters = dict(router.profiler.counters)
+    sess.close()
+    return outs, counters, wall, peak
+
+
+def reference_streams(pool: ModelPool, n_shorts: int,
+                      long_budget: int) -> List[np.ndarray]:
+    """Target-only greedy decoding of the same requests (the bit-equality
+    oracle for both churn modes)."""
+    rng = np.random.default_rng(7)
+    long_prompt = rng.integers(1, 64, size=8).astype(np.int64)
+    shorts = [rng.integers(1, 64, size=6).astype(np.int64)
+              for _ in range(n_shorts)]
+    r = ChainRouter(pool, "t", adaptive=False, fixed_chain=("t",),
+                    fixed_window=1)
+    outs = [r.generate(long_prompt[None, :], np.array([8]), long_budget,
+                       request_id="ref-long").generated[0]]
+    for i, sp in enumerate(shorts):
+        outs.append(r.generate(sp[None, :], np.array([6]), 4,
+                               request_id=f"ref-{i}").generated[0])
+    return outs
+
+
+def main(n_shorts: int = 8, long_budget: int = 40, max_len: int = 128,
+         check: bool = False) -> Dict[str, Dict]:
+    pool = tiny_pool()
+    rows = {}
+    ref = reference_streams(pool, n_shorts, long_budget)
+    for mode, paged in (("paged", True), ("contiguous", False)):
+        outs, counters, wall, peak = run_churn(pool, paged, n_shorts,
+                                               long_budget, max_len)
+        defrags = sum(v for k, v in counters.items()
+                      if k.startswith("defrag."))
+        reprefills = sum(v for k, v in counters.items()
+                         if k.startswith("reprefill."))
+        exact = all(np.array_equal(a, b) for a, b in zip(outs, ref))
+        rows[mode] = dict(cycles=counters.get("cycles", 0), defrags=defrags,
+                          reprefills=reprefills, peak_slots=peak,
+                          committed=int(sum(len(o) for o in outs)),
+                          wall_s=wall, bit_exact=exact)
+        print(f"churn,{mode},{int(rows[mode]['cycles'])},{int(defrags)},"
+              f"{int(reprefills)},{peak},{rows[mode]['committed']},"
+              f"{wall:.2f},{'exact' if exact else 'DIVERGED'}")
+    if check:
+        p = rows["paged"]
+        assert p["defrags"] == 0 and p["reprefills"] == 0, (
+            f"paged churn tripped capacity escapes: {p}")
+        assert p["bit_exact"], "paged churn diverged from target-only greedy"
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--assert", dest="check", action="store_true",
+                    help="exit nonzero if the paged run trips an escape "
+                         "hatch or diverges from target-only decoding")
+    ap.add_argument("--shorts", type=int, default=8)
+    ap.add_argument("--long-budget", type=int, default=40)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+    main(n_shorts=args.shorts, long_budget=args.long_budget,
+         max_len=args.max_len, check=args.check)

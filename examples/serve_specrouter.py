@@ -8,6 +8,7 @@ baselines for the EAF speedup.
         [--tree 2x2x1]      # token-tree speculation (SSD-Tree baseline +
                             # the shape joins SpecRouter's search space)
         [--no-continuous]   # legacy stop-the-world batch formation
+        [--no-paged]        # legacy contiguous shared-pointer KV (A/B)
 """
 import argparse
 
@@ -19,6 +20,7 @@ from repro.train.pool import build_trained_pool
 
 
 def run(pool, corpus, args, label, router_kwargs):
+    router_kwargs = dict(router_kwargs, paged=not args.no_paged)
     reqs = make_workload(corpus, args.dataset, args.rate, args.duration,
                          seed=7)
     eng = ServingEngine(pool, "demo-7b", batch_size=args.batch,
@@ -49,6 +51,9 @@ def main():
                          "adaptive scheduler pick the tree draft")
     ap.add_argument("--no-continuous", action="store_true",
                     help="legacy stop-the-world batch formation (A/B)")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="legacy contiguous shared-pointer KV state "
+                         "instead of the paged per-slot block tables (A/B)")
     args = ap.parse_args()
 
     pool, corpus = build_trained_pool(steps=args.steps)

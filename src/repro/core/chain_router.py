@@ -85,9 +85,15 @@ class ChainRouter:
                  tree_shapes: Sequence = (),
                  fixed_tree=None,
                  seed: int = 0,
+                 paged: bool = True,
                  profiler: Optional[PerformanceProfiler] = None):
         self.pool = pool
         self.target = target
+        # paged KV cache (per-slot block tables) is the default serving
+        # state; ``paged=False`` keeps the legacy contiguous shared-pointer
+        # state for A/B.  Archs without a per-position cache (SSM/hybrid)
+        # fall back to contiguous automatically either way.
+        self.paged = paged
         self.eos = eos_token
         self.greedy = greedy
         self.temperature = temperature
@@ -153,7 +159,8 @@ class ChainRouter:
         probs, _sid = self.executor.prefill(PrefillRequest(
             model=m, request_id=request_id, tokens=seq.astype(np.int32),
             valid=valid, max_len=max_len,
-            with_snaps=cfg.arch_type in ("ssm", "hybrid"), extras=extras))
+            with_snaps=cfg.arch_type in ("ssm", "hybrid"),
+            paged=self.paged, extras=extras))
         return probs
 
     def _gap_prefix(self, m: str, request_id: str, seq, seq_len, active):
@@ -188,13 +195,43 @@ class ChainRouter:
         return prefix, pvalid, gap
 
     def _ensure_capacity(self, m: str, request_id: str, needed: int,
-                         seq, seq_len, max_len) -> None:
-        """Guard against physical buffer exhaustion: defragment masked holes
-        (beyond-paper) and, as a last resort, rebuild the state from the
-        committed stream.  Without this, dynamic_update_slice would CLAMP
-        out-of-range appends and silently corrupt the cache."""
+                         seq, seq_len, max_len,
+                         rows: Optional[np.ndarray] = None) -> None:
+        """Guard against physical buffer exhaustion.  Paged states use
+        BLOCK accounting: every row that will append (``rows`` mask; None =
+        all — paged appends only consume capacity for writing rows, so the
+        caller should scope the check to them) must fit ``needed`` more
+        entries inside its per-row capacity and the pool must hold enough
+        free blocks for the worst case — with default full provisioning
+        this never trips, because retirement returns blocks instead of
+        burning shared-pointer headroom (the churn regression test pins the
+        counters at zero).  Contiguous states keep the legacy escalation:
+        force-defragment masked holes, then rebuild from the committed
+        stream as a last resort (their shared pointer advances for every
+        row, so ``rows`` does not apply).  Without this, out-of-range
+        appends would be CLAMPED (contiguous) or DROPPED (paged), silently
+        corrupting the cache."""
+        from ..models.kv_cache import PagedModelState
         sid = StateManager.key(m, request_id)
         st = self.states.get(sid)
+        if isinstance(st, PagedModelState):
+            sel = (np.ones(st.batch, bool) if rows is None
+                   else np.asarray(rows, bool))
+            if not sel.any():
+                return
+            wp = np.asarray(st.write_ptr)[sel]
+            nb = np.asarray(st.num_blocks)[sel]
+            high = wp + needed
+            new_blocks = np.maximum(-(-high // st.block_size) - nb, 0)
+            if (high.max() <= st.capacity
+                    and int(new_blocks.sum()) <= int(st.free_top)):
+                return
+            # no defragment to run — paged rows cannot leak holes into each
+            # other; a genuine overflow means the session was undersized
+            self.states.release(sid)
+            self._prefill_model(m, request_id, seq, seq_len, max_len)
+            self.profiler.count(f"reprefill.{m}")
+            return
         if int(st.write_ptr) + needed <= st.capacity:
             return
         self.states.maybe_defragment(sid, force=True)
@@ -229,8 +266,10 @@ class ChainRouter:
         w_max = 1                      # reserve for the BUCKETED width: the
         while w_max < n:               # append is w wide, and an under-
             w_max *= 2                 # reservation would let the slice
+        rows_mask = np.zeros(seq.shape[0], bool)   # paged: only the admitted
+        rows_mask[row] = True                      # row consumes capacity
         self._ensure_capacity(m, session_id, w_max + 2, seq,  # clamp onto
-                              seq_len, max_len)               # live rows
+                              seq_len, max_len, rows=rows_mask)  # live rows
         done = int(self.states.lengths(sid)[row])   # re-prefill may have run
         if done >= n:
             return None
@@ -256,7 +295,7 @@ class ChainRouter:
         prefixes = {}
         for m in chain:
             self._ensure_capacity(m, request_id, needed, seq, seq_len,
-                                  max_len)
+                                  max_len, rows=active)
             pfx, pval, _gap = self._gap_prefix(m, request_id, seq, seq_len,
                                                active)
             if pfx is None:   # fell too far behind -> catch-up prefill
@@ -269,10 +308,16 @@ class ChainRouter:
 
     def _apply_termination(self, seq: np.ndarray, seq_len: np.ndarray,
                            prompt_lens: np.ndarray, budget: np.ndarray,
-                           active: np.ndarray) -> None:
+                           active: np.ndarray,
+                           scan_from: Optional[np.ndarray] = None) -> None:
         """Per-row termination: budget exhaustion (over-committed tokens in
         the final cycle are truncated — the prefix still equals target-only
-        output, so equivalence is preserved) and EOS."""
+        output, so equivalence is preserved) and EOS.
+
+        ``scan_from`` (B,) bounds the EOS scan to tokens committed THIS
+        cycle (everything before it was already scanned when it was
+        committed) — without it a long generation re-scans its whole output
+        every cycle, O(n²) per request."""
         B = seq.shape[0]
         for b in range(B):
             if not active[b]:
@@ -281,10 +326,12 @@ class ChainRouter:
                 seq_len[b] = prompt_lens[b] + budget[b]
                 active[b] = False
             if self.eos >= 0:
-                row = seq[b, prompt_lens[b]:seq_len[b]]
+                start = prompt_lens[b] if scan_from is None else \
+                    max(int(scan_from[b]), int(prompt_lens[b]))
+                row = seq[b, start:seq_len[b]]
                 hits = np.where(row == self.eos)[0]
                 if hits.size:
-                    seq_len[b] = prompt_lens[b] + hits[0] + 1
+                    seq_len[b] = start + hits[0] + 1
                     active[b] = False
 
     # ------------------------------------------------------------------
@@ -539,7 +586,7 @@ class ChainRouter:
             c = np.where(active, c, 0).astype(np.int32)
             self.executor.resolve_tree(ResolveTreeRequest(
                 model=m, request_id=request_id, tree=tree,
-                path_nodes=path, keep_len=c))
+                path_nodes=path, keep_len=c, active=active))
 
         # --- commit the winning path + correction/bonus --------------------
         path_tokens = np.take_along_axis(cand, path, axis=1)   # (B, D)
@@ -671,8 +718,12 @@ class RouterSession:
         wall = _time.perf_counter() - t0
         acc_mean = float(np.mean(n_acc[pre_active]))
         self.steps += 1
+        # EOS scan covers only this cycle's commits (earlier tokens were
+        # scanned the cycle they landed) — O(commits), not O(generated)
+        scan_from = np.maximum(gen_before + self.prompt_len,
+                               self.prompt_len)
         r._apply_termination(self.seq, self.seq_len, self.prompt_len,
-                             self.budget, self.active)
+                             self.budget, self.active, scan_from=scan_from)
         # acceptance diagnostics report the RAW speculative commit, but the
         # session's committed counter only advances by tokens that SURVIVED
         # termination (budget truncation / EOS cut): tree cycles commit

@@ -42,6 +42,7 @@ class PrefillRequest:
     valid: np.ndarray             # (B, Tp) bool
     max_len: int
     with_snaps: bool = False
+    paged: bool = True            # paged KV state (archs that support it)
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
@@ -126,6 +127,10 @@ class ResolveTreeRequest:
     tree: TokenTree
     path_nodes: np.ndarray        # (B, D) winning root->leaf node ids
     keep_len: np.ndarray          # (B,) int32 — consensus depth to keep
+    active: np.ndarray = None     # (B,) bool — rows that appended a tree
+                                  # block this cycle (paged states must not
+                                  # touch the trailing slots of rows that
+                                  # sat the cycle out)
 
 
 @dataclasses.dataclass
@@ -192,8 +197,9 @@ class Executor:
         sid = StateManager.key(req.model, req.request_id)
         B = req.tokens.shape[0]
         state, state_axes = lm.make_state(B, req.max_len,
-                                          with_snaps=req.with_snaps)
-        key = ("prefillop", req.model, req.tokens.shape)
+                                          with_snaps=req.with_snaps,
+                                          paged=req.paged)
+        key = ("prefillop", req.model, req.tokens.shape, req.paged)
         if key not in self._jit_cache:
             def f(params, state, tokens, valid, extras):
                 return lm.prefill(params, state, tokens, valid=valid,
@@ -519,28 +525,34 @@ class Executor:
             N, D = tree.num_nodes, tree.depth_levels
 
             @jax.jit
-            def f(state, path_nodes, keep_len):
+            def f(state, path_nodes, keep_len, active):
                 depth_ok = (jnp.arange(D, dtype=jnp.int32)[None, :]
                             < keep_len[:, None])                   # (B, D)
                 onehot = ((path_nodes[..., None]
                            == jnp.arange(N, dtype=jnp.int32)[None, None, :])
                           & depth_ok[..., None])                   # (B, D, N)
                 keep = jnp.any(onehot, axis=1)                     # (B, N)
-                return kvc.resolve_tree(state, N, keep, keep_len)
+                return kvc.resolve_tree(state, N, keep, keep_len,
+                                        active=active)
 
             self._jit_cache[key] = f
         return self._jit_cache[key]
 
     def resolve_tree(self, req: ResolveTreeRequest):
         """ResolveTreeProcessor: consensus settle of the model's tree block
-        (the tree analogue of RollbackProcessor — mask arithmetic plus the
-        shared write-pointer rewind, no data movement)."""
+        (the tree analogue of RollbackProcessor — mask/table arithmetic
+        plus the write-pointer rewind, no data movement)."""
         sid = StateManager.key(req.model, req.request_id)
         state = self.states.get(sid)
+        # no fallback mask: a paged resolve WITHOUT the active gate would
+        # re-mask committed trailing slots of rows that sat the cycle out,
+        # so kvc.resolve_tree asserts instead (contiguous states ignore it)
+        active = (jnp.asarray(req.active, bool)
+                  if req.active is not None else None)
         with self.profiler.timed("rollback", req.model,
                                  tokens=int(req.keep_len.sum())):
             state = self._resolve_tree(req.model, req.tree)(
                 state, jnp.asarray(req.path_nodes, jnp.int32),
-                jnp.asarray(req.keep_len, jnp.int32))
+                jnp.asarray(req.keep_len, jnp.int32), active)
             jax.block_until_ready(state.write_ptr)
         self.states.update(sid, state)

@@ -73,7 +73,8 @@ class ModelChainScheduler:
                  tree_capable: Optional[Dict[str, bool]] = None,
                  verify_overhead: float = 0.1,
                  switch_penalty_steps: float = 32.0,
-                 default_decode_s: float = 0.05):
+                 default_decode_s: float = 0.05,
+                 reuse_rtol: float = 0.02):
         assert target in model_names
         self.models = list(model_names)
         self.target = target
@@ -89,6 +90,15 @@ class ModelChainScheduler:
         self.nu = verify_overhead
         self.switch_penalty_steps = switch_penalty_steps
         self.default_decode_s = default_decode_s
+        # Eq. 7 re-evaluation gate: with reschedule_every=1 the full
+        # (chain, window, tree) sweep runs EVERY cycle even though its only
+        # inputs are slow-moving EMAs.  ``get_optimal_chain`` snapshots
+        # those inputs and reuses the previous argmin until some input has
+        # drifted by more than ``reuse_rtol`` (relative).  0 disables reuse.
+        self.reuse_rtol = reuse_rtol
+        self.eval_count = 0           # full sweeps actually executed
+        self.reuse_count = 0          # calls served from the memo
+        self._last_inputs: Optional[Dict] = None
         self._last_choice: Optional[ChainChoice] = None
 
     # ---- Step 1: candidate chains (Alg. 1 lines 2-3) -------------------
@@ -155,8 +165,34 @@ class ModelChainScheduler:
         base = min(self.capability.values())
         return self.default_decode_s * (self.capability[m] / base) ** 0.5
 
+    # ---- memoization: Eq. 7 inputs snapshot -----------------------------
+    def _inputs_snapshot(self) -> Dict:
+        """Every value ``predict_t_eff`` can read: per-(op, model[, block])
+        profiler EMAs and the pairwise similarity table."""
+        snap = {("sim",) + k: v for k, v in self.sims.table().items()}
+        for k, e in self.profiler.emas.items():
+            if k[0] in ("decode1", "decode_level", "verify", "prefill") \
+                    and e.count:
+                snap[("ema",) + k] = e.get()
+        return snap
+
+    def _inputs_drifted(self, snap: Dict) -> bool:
+        if self._last_inputs is None or snap.keys() != self._last_inputs.keys():
+            return True
+        for k, v in snap.items():
+            old = self._last_inputs[k]
+            if abs(v - old) > self.reuse_rtol * max(abs(old), 1e-12):
+                return True
+        return False
+
     # ---- Steps 2-3: select optimum (Alg. 1 lines 6-18) ------------------
     def get_optimal_chain(self) -> ChainChoice:
+        snap = self._inputs_snapshot()
+        if (self.reuse_rtol > 0 and self._last_choice is not None
+                and not self._inputs_drifted(snap)):
+            self.reuse_count += 1
+            return self._last_choice
+        self.eval_count += 1
         best = None
         table = {}
         prev = self._last_choice.chain if self._last_choice else None
@@ -180,4 +216,5 @@ class ModelChainScheduler:
         best = ChainChoice(best.chain, best.window, best.predicted_t_eff,
                            table, tree=best.tree)
         self._last_choice = best
+        self._last_inputs = snap
         return best

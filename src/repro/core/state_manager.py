@@ -4,7 +4,10 @@ rollbacks for per-model ModelStates.
 Atomicity note: JAX states are immutable pytrees; every update is
 replace-on-success, so a failed processor call can never leave a state
 half-mutated — this *is* the paper's atomic-rollback requirement, obtained
-structurally rather than via locking.
+structurally rather than via locking.  The ``_lock`` guards the *registry*
+itself: every read-modify-write (``free_rows``, ``maybe_defragment``) holds
+it end to end, so a concurrent ``update`` can neither interleave between
+the read and the write-back nor be silently overwritten by a stale state.
 
 Slot-level continuous batching: a serving session keys ONE batch-B state
 per model (``model/session_id``); individual batch rows are *slots* that
@@ -12,6 +15,11 @@ are freed (``free_rows``) when a request finishes and re-filled by a
 catch-up prefill when a new request is admitted.  ``create`` optionally
 records the state's layer-axes pytree so ``free_rows`` can wipe recurrent
 per-row carries exactly (named ``"batch"`` axes), not heuristically.
+
+Paged states (``PagedModelState``) free and account capacity in BLOCKS:
+``free_rows`` returns a retired row's blocks to the pool in O(1) and
+defragmentation is structurally unnecessary (rows cannot leak holes into
+each other), so ``maybe_defragment`` is a no-op for them.
 """
 from __future__ import annotations
 
@@ -21,20 +29,20 @@ from typing import Any, Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.kv_cache import (ModelState, fragmentation, defragment,
+from ..models.kv_cache import (ModelState, PagedModelState, blocks_in_use,
+                               fragmentation, defragment,
                                free_rows as _free_rows)
 
 
 class StateManager:
     def __init__(self, defrag_threshold: float = 0.5):
-        self._states: Dict[str, ModelState] = {}
+        self._states: Dict[str, Any] = {}
         self._axes: Dict[str, Any] = {}
         self._lock = threading.Lock()
         self.defrag_threshold = defrag_threshold
         self.defrag_count = 0
 
-    def create(self, state_id: str, state: ModelState,
-               layer_axes: Any = None):
+    def create(self, state_id: str, state, layer_axes: Any = None):
         with self._lock:
             self._states[state_id] = state
             if layer_axes is not None:
@@ -42,10 +50,11 @@ class StateManager:
             else:
                 self._axes.pop(state_id, None)
 
-    def get(self, state_id: str) -> ModelState:
-        return self._states[state_id]
+    def get(self, state_id: str):
+        with self._lock:
+            return self._states[state_id]
 
-    def update(self, state_id: str, state: ModelState):
+    def update(self, state_id: str, state):
         with self._lock:
             self._states[state_id] = state
 
@@ -62,27 +71,43 @@ class StateManager:
                 self._axes.pop(k, None)
 
     def free_rows(self, state_id: str, rows: np.ndarray):
-        """Retire slot rows of a session state: logical release plus exact
-        per-row recurrent-carry wipe (uses the axes recorded at create)."""
-        st = self._states[state_id]
-        self.update(state_id, _free_rows(st, rows, self._axes.get(state_id)))
+        """Retire slot rows of a session state atomically: the read, the
+        per-row release (paged: O(1) block return; contiguous: logical mask
+        release + exact recurrent-carry wipe), and the write-back all
+        happen under the registry lock."""
+        with self._lock:
+            st = self._states[state_id]
+            self._states[state_id] = _free_rows(st, rows,
+                                                self._axes.get(state_id))
 
     def maybe_defragment(self, state_id: str, force: bool = False) -> bool:
         """Beyond-paper: compact masked holes when fragmentation is high
-        (or unconditionally when ``force``, e.g. on capacity pressure)."""
-        st = self._states[state_id]
-        frag = float(fragmentation(st))
-        if force or frag > self.defrag_threshold:
-            self.update(state_id, defragment(st))
-            self.defrag_count += 1
-            return True
-        return False
+        (or unconditionally when ``force``, e.g. on capacity pressure).
+        Atomic read-modify-write; no-op for paged states (per-row block
+        tables cannot fragment across slots)."""
+        with self._lock:
+            st = self._states[state_id]
+            if isinstance(st, PagedModelState):
+                return False
+            frag = float(fragmentation(st))
+            if force or frag > self.defrag_threshold:
+                self._states[state_id] = defragment(st)
+                self.defrag_count += 1
+                return True
+            return False
 
     def lengths(self, state_id: str) -> np.ndarray:
-        return np.asarray(self._states[state_id].length)
+        with self._lock:
+            return np.asarray(self._states[state_id].length)
 
     def capacity_used(self, state_id: str) -> int:
-        return int(self._states[state_id].write_ptr)
+        """Physical occupancy: shared-pointer height for contiguous states,
+        in-use pool slots (blocks * block_size) for paged ones."""
+        with self._lock:
+            st = self._states[state_id]
+        if isinstance(st, PagedModelState):
+            return int(blocks_in_use(st)) * st.block_size
+        return int(st.write_ptr)
 
     @staticmethod
     def key(model: str, request_id: str) -> str:

@@ -16,6 +16,19 @@ kernel is exactly the T=1 special case.
 Grid: (B, Hkv, S/BLK_S) — the minor S axis is sequential on TPU, so the
 (m, l, acc) accumulators live in revisited output blocks; the wrapper
 normalizes acc/l at the end (no in-kernel finalization step needed).
+
+Paged variant (``paged_flash_decode_pallas``): the KV cache is a POOL of
+fixed-size blocks (P, bs, Hkv, D) addressed through a per-row block table.
+The block table is a *scalar-prefetch* argument: the grid's minor axis
+walks each row's table entries and the K/V BlockSpec index maps read
+``table[b, r]`` to DMA exactly that pool block into VMEM — on the TPU
+path the gather IS the pipeline, no materialized per-row view.  (The
+CPU/jnp forward in models/ materializes the gathered view and runs the
+jnp attention instead — the repo-wide staging convention; this kernel is
+held to the same oracle, ``ref.paged_attention_ref``, until the TPU
+serving path wires it in.)  The kernel body is byte-identical to the tree
+kernel's online softmax (T queries, per-query mask rows), so it subsumes
+both the single-token (T=1) and tree-block decode cases.
 """
 from __future__ import annotations
 
@@ -24,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLK_S = 512
 NEG = -1e30
@@ -176,4 +190,72 @@ def masked_tree_attention_pallas(q: jnp.ndarray, k: jnp.ndarray,
     l1 = l[..., :1]
     out = jnp.where(l1 > 0, acc / jnp.maximum(l1, 1e-30), 0.0)
     # (B, Hkv, T, g, D) -> (B, T, H, D)
+    return out.swapaxes(1, 2).reshape(B, T, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged flash-decode: gather K/V block-by-block through the block table
+# ---------------------------------------------------------------------------
+def _paged_attn_kernel(table_ref, q_ref, k_ref, v_ref, mask_ref,
+                       acc_ref, m_ref, l_ref, *, scale):
+    # table_ref is consumed by the BlockSpec index maps (scalar prefetch);
+    # the body is exactly the tree kernel's online softmax over one block.
+    _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref,
+                      scale=scale)
+
+
+def paged_flash_decode_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
+                              v_pool: jnp.ndarray,
+                              block_table: jnp.ndarray,
+                              mask: jnp.ndarray,
+                              scale: float | None = None,
+                              interpret: bool = True) -> jnp.ndarray:
+    """q: (B, T, H, D); k_pool, v_pool: (P, bs, Hkv, D) block pools;
+    block_table: (B, R) int32 pool block per row-local block (entries must
+    be pre-clamped to [0, P) — unallocated blocks are mask-False anyway);
+    mask: (B, T, S) per-query validity rows with S = R * bs.
+
+    Grid (B, Hkv, R): the minor axis walks the row's block table; the K/V
+    index maps dereference ``table[b, r]`` so each pool block is DMA'd
+    exactly once per (row, kv-head).  T=1 gives paged single-token decode;
+    T>1 with ancestor-mask rows gives paged tree-block decode.  On the TPU
+    path bs should be a multiple of 8 (sublane) and D 128-aligned
+    (ops.py pads D; bs is a build-time choice).
+    """
+    B, T, H, D = q.shape
+    P, bs, Hkv, _ = k_pool.shape
+    R = block_table.shape[1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, T, Hkv, g, D)
+    tbl = block_table.reshape(-1).astype(jnp.int32)       # (B*R,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, R),
+        in_specs=[
+            pl.BlockSpec((1, T, 1, g, D), lambda b, h, r, t: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, r, t: (t[b * R + r], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, r, t: (t[b * R + r], 0, h, 0)),
+            pl.BlockSpec((1, T, bs), lambda b, h, r, t: (b, 0, r)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, g, D), lambda b, h, r, t: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, T, g, 128), lambda b, h, r, t: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, T, g, 128), lambda b, h, r, t: (b, h, 0, 0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, T, g, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, T, g, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, T, g, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tbl, qg, k_pool, v_pool, mask)
+
+    l1 = l[..., :1]
+    out = jnp.where(l1 > 0, acc / jnp.maximum(l1, 1e-30), 0.0)
     return out.swapaxes(1, 2).reshape(B, T, H, D).astype(q.dtype)

@@ -128,3 +128,38 @@ def masked_tree_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     out = _attn.masked_tree_attention_pallas(
         qp, kp, vp, mp, scale=scale, interpret=_INTERPRET)
     return out[:, :, :, :D]
+
+
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("block_size", "use_kernel"))
+def paged_decode_attention(q: jnp.ndarray, k_flat: jnp.ndarray,
+                           v_flat: jnp.ndarray, block_table: jnp.ndarray,
+                           mask: jnp.ndarray, block_size: int,
+                           use_kernel: bool = True) -> jnp.ndarray:
+    """Paged flash-decode over a block pool (the paged-KV serving path).
+
+    q: (B, T, H, D); k_flat, v_flat: (P·bs, Hkv, D) — the flat pool layout
+    ``PagedModelState`` stores per layer; block_table: (B, R) int32 with
+    -1 marking unallocated row blocks; mask: (B, T, S) per-query validity
+    rows, S = R·bs.  T=1 is paged single-token decode; T>1 with
+    ancestor-mask rows is the paged tree-block case — one kernel subsumes
+    both.  Unallocated table entries are clamped to pool block 0; their
+    mask columns are False so they never reach the online softmax.
+    """
+    if not use_kernel:
+        P = k_flat.shape[0] // block_size
+        kp = k_flat.reshape(P, block_size, *k_flat.shape[1:])
+        vp = v_flat.reshape(P, block_size, *v_flat.shape[1:])
+        return ref.paged_attention_ref(q, kp, vp, block_table, mask)
+    D = q.shape[-1]
+    scale = 1.0 / (D ** 0.5)     # scale by TRUE head dim before padding
+    qp = _pad_to(q, 128, 3, 0.0)
+    kf = _pad_to(k_flat, 128, 2, 0.0)
+    vf = _pad_to(v_flat, 128, 2, 0.0)
+    P = kf.shape[0] // block_size
+    kp = kf.reshape(P, block_size, *kf.shape[1:])
+    vp = vf.reshape(P, block_size, *vf.shape[1:])
+    tbl = jnp.clip(block_table, 0, P - 1)
+    out = _attn.paged_flash_decode_pallas(
+        qp, kp, vp, tbl, mask, scale=scale, interpret=_INTERPRET)
+    return out[:, :, :, :D]

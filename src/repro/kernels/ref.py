@@ -93,6 +93,32 @@ def masked_tree_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# 4b. Paged decode attention (block-table gather + tree-block attention)
+# ---------------------------------------------------------------------------
+def paged_attention_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                        mask: jnp.ndarray,
+                        scale: float | None = None) -> jnp.ndarray:
+    """q: (B, T, H, D); k_pool, v_pool: (P, bs, Hkv, D) block pools;
+    block_table: (B, R) int32 (negative = unallocated, mask must be False
+    there); mask: (B, T, S) with S = R * bs.
+
+    Materializes each row's contiguous (B, S, Hkv, D) view via the block
+    table, then runs the tree-attention oracle — the allclose target for
+    ``paged_flash_decode_pallas`` (which performs the same gather
+    block-by-block inside the pipeline instead)."""
+    P, bs, Hkv, D = k_pool.shape
+    B, R = block_table.shape
+    S = R * bs
+    s = jnp.arange(S, dtype=jnp.int32)
+    pid = block_table[:, s // bs]                            # (B, S)
+    flat = jnp.maximum(pid, 0) * bs + (s % bs)[None, :]
+    kv = k_pool.reshape(P * bs, Hkv, D)[flat]                # (B, S, Hkv, D)
+    vv = v_pool.reshape(P * bs, Hkv, D)[flat]
+    return masked_tree_attention_ref(q, kv, vv, mask, scale=scale)
+
+
+# ---------------------------------------------------------------------------
 # 5. Row-wise top-k (greedy tree-draft expansion)
 # ---------------------------------------------------------------------------
 def topk_ref(logits: jnp.ndarray, k: int):

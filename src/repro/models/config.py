@@ -116,6 +116,12 @@ class ModelConfig:
         dead branches; recurrent carries (SSM/hybrid) cannot branch."""
         return self.arch_type in ("dense", "moe", "audio", "vlm")
 
+    @property
+    def supports_paged(self) -> bool:
+        """Paged KV needs a purely per-position cache; recurrent carries
+        (SSM/hybrid) keep the contiguous state + snapshot rings."""
+        return self.arch_type in ("dense", "moe", "audio", "vlm")
+
     def param_count(self) -> int:
         """Analytic parameter count (used for MODEL_FLOPS roofline term)."""
         d, L, V = self.d_model, self.num_layers, self.vocab_size

@@ -172,6 +172,29 @@ def overlay_block_mask(m: jnp.ndarray, cache_mask: jnp.ndarray,
         m, ov, (jnp.int32(0), jnp.int32(0), region_start))
 
 
+def overlay_block_mask_at(m: jnp.ndarray, cache_mask: jnp.ndarray,
+                          block_attend: jnp.ndarray,
+                          cols: jnp.ndarray) -> jnp.ndarray:
+    """Per-row variant of ``overlay_block_mask`` for paged states: each
+    row's tree region lives at its OWN slots ``cols`` (B, R) — the row-local
+    slots the append returned for the region's entries.  Rows that sat out
+    the cycle carry the append's far-future sentinel and are dropped.
+
+    m:            (B, T, S) mask from ``build_attention_mask``
+    cache_mask:   (B, S) post-append logical validity
+    block_attend: (T, R) static ancestor-or-self override
+    cols:         (B, R) int32 row-local region slots (sentinel -> skip row)
+    """
+    T, R = block_attend.shape
+    B, S = cache_mask.shape
+    safe = jnp.clip(cols, 0, S - 1)
+    region_valid = jnp.take_along_axis(cache_mask, safe, axis=1)  # (B, R)
+    ov = block_attend[None, :, :] & region_valid[:, None, :]      # (B, T, R)
+    return m.at[jnp.arange(B)[:, None, None],
+                jnp.arange(T)[None, :, None],
+                cols[:, None, :]].set(ov, mode="drop")
+
+
 def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   mask: jnp.ndarray, attn_softcap: float = 0.0,
                   scale: float | None = None) -> jnp.ndarray:

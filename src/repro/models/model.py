@@ -51,8 +51,22 @@ class LanguageModel:
         return state, axes
 
     # ---- state -------------------------------------------------------
-    def make_state(self, batch: int, max_len: int, with_snaps: bool = False):
+    def make_state(self, batch: int, max_len: int, with_snaps: bool = False,
+                   paged: bool = False, block_size: int = 0,
+                   pool_blocks: int = 0):
+        """``paged=True`` builds a PagedModelState (per-row block tables
+        over a shared block pool) for archs with a purely per-position
+        cache; SSM/hybrid silently keep the contiguous layout (their
+        recurrent carries need the snapshot-ring machinery)."""
         cfg = self.cfg
+        if paged and cfg.supports_paged:
+            bs = block_size or kvc.PAGE_BLOCK
+            layers, axes = self.mod.make_paged_cache(
+                cfg, batch, max_len, bs, pool_blocks or None)
+            state = kvc.make_paged_state(batch, max_len, layers,
+                                         block_size=bs,
+                                         pool_blocks=pool_blocks or None)
+            return state, kvc.paged_state_axes(axes, bs)
         if self.mod in (ssm, hybrid):
             layers, axes = self.mod.make_cache(cfg, batch, max_len,
                                                with_snaps=with_snaps)

@@ -303,6 +303,7 @@ def init(key, cfg: ModelConfig):
 
 
 make_cache = tf.make_cache  # same attention KV cache as dense
+make_paged_cache = tf.make_paged_cache
 
 
 def moe_ffn_dispatch(p, cfg: ModelConfig, x: jnp.ndarray):
@@ -321,12 +322,19 @@ def moe_ffn_dispatch(p, cfg: ModelConfig, x: jnp.ndarray):
 
 
 def _moe_block(pl, cfg, x, *, k_cached, v_cached, mask, q_pos, theta,
-               write_slot=None):
+               write_slot=None, paged_idx=None):
     h = nn.rmsnorm(pl["ln1"], x, cfg.rms_eps)
     q, k_new, v_new = nn.attention_qkv(pl["attn"], h, cfg)
     q = tf._rope_traced(q, q_pos, theta, cfg.head_dim)
     k_new = tf._rope_traced(k_new, q_pos, theta, cfg.head_dim)
-    if k_cached is not None:
+    if k_cached is not None and paged_idx is not None:
+        phys_new, view_idx = paged_idx
+        ck, cv = kvc.paged_write_kv(k_cached, v_cached, k_new, v_new,
+                                    phys_new)
+        attn_out = nn.gqa_attention(q, kvc.paged_gather(ck, view_idx),
+                                    kvc.paged_gather(cv, view_idx), mask)
+        new_cache = (ck, cv)
+    elif k_cached is not None:
         ck, cv = kvc.write_kv(k_cached, v_cached, k_new, v_new, write_slot)
         attn_out = nn.gqa_attention(q, ck, cv, mask)
         new_cache = (ck, cv)
@@ -344,19 +352,31 @@ def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
                    spec_depth=None, spec_attend=None, **_ignored):
     state, q_pos, slot = kvc.append_tokens(state, tokens, valid,
                                            spec_depth=spec_depth)
+    paged = isinstance(state, kvc.PagedModelState)
     mask = nn.build_attention_mask(state.mask, state.pos_buf, q_pos, window=0)
     if spec_attend is not None:   # tree speculation: ancestor-mask override
         T = tokens.shape[1]
-        mask = nn.overlay_block_mask(mask, state.mask,
-                                     jnp.asarray(spec_attend),
-                                     slot + T - spec_attend.shape[1])
+        spec_attend = jnp.asarray(spec_attend)
+        if paged:
+            appended = (valid.any(axis=1) if valid is not None
+                        else jnp.ones((tokens.shape[0],), jnp.bool_))
+            mask = nn.overlay_block_mask_at(
+                mask, state.mask, spec_attend,
+                kvc.tree_region_cols(state, spec_attend.shape[1],
+                                     appended))
+        else:
+            mask = nn.overlay_block_mask(mask, state.mask, spec_attend,
+                                         slot + T - spec_attend.shape[1])
+    paged_idx = ((kvc.physical_slots(state, slot),
+                  kvc.physical_view_index(state)) if paged else None)
     x = tf._embed(params, cfg, tokens)
     theta = jnp.float32(cfg.rope_theta)
 
     def body(x, s):
         x, _aux, (ck, cv) = _moe_block(
             s["pl"], cfg, x, k_cached=s["ck"], v_cached=s["cv"],
-            mask=mask, q_pos=q_pos, theta=theta, write_slot=slot)
+            mask=mask, q_pos=q_pos, theta=theta,
+            write_slot=None if paged else slot, paged_idx=paged_idx)
         return x, {"k": ck, "v": cv}
 
     xs = {"pl": params["blocks"], "ck": state.layers["k"],

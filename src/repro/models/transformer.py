@@ -154,7 +154,8 @@ def _qk_normed(pl, cfg, q, k):
 
 
 def _block(pl, cfg: ModelConfig, x, *, k_cached, v_cached, mask,
-           q_pos3, theta, cross_kv=None, write_slot=None, kv_scales=None):
+           q_pos3, theta, cross_kv=None, write_slot=None, kv_scales=None,
+           paged_idx=None):
     """One transformer block.
 
     k_cached/v_cached: (B, S, Hkv, hd) — full physical cache view for this
@@ -162,6 +163,15 @@ def _block(pl, cfg: ModelConfig, x, *, k_cached, v_cached, mask,
     we compute and write here when write_slot is given; for trainer mode
     k_cached is None and attention is over the block itself).
     kv_scales: (k_scale, v_scale) (B, S, Hkv) when cfg.kv_quant.
+    paged_idx: (phys_new (B, T), view_idx (B, S)) when the state is paged —
+    k_cached/v_cached are then flat pool tensors (P·bs, Hkv, hd): new K/V
+    scatter to ``phys_new`` and attention consumes the per-row gathered
+    view.  Materializing the gather is the CPU/jnp staging path (same
+    convention as every kernel in this repo: the jnp forward is the
+    oracle-checked reference); the TPU serving path replaces it with
+    ``ops.paged_decode_attention``, whose scalar-prefetched block table
+    performs the identical gather block-by-block inside the kernel
+    pipeline with no materialized view.
     """
     h = nn.rmsnorm(pl["ln1"], x, cfg.rms_eps)
     q, k_new, v_new = nn.attention_qkv(pl["attn"], h, cfg)
@@ -174,7 +184,28 @@ def _block(pl, cfg: ModelConfig, x, *, k_cached, v_cached, mask,
         q = _rope_traced(q, qp, theta, cfg.head_dim)
         k_new = _rope_traced(k_new, qp, theta, cfg.head_dim)
 
-    if k_cached is not None:
+    if k_cached is not None and paged_idx is not None:
+        phys_new, view_idx = paged_idx
+        if cfg.kv_quant:
+            kq, ksc = kvc.kv_quantize(k_new)
+            vq, vsc = kvc.kv_quantize(v_new)
+            ck, cv = kvc.paged_write_kv(k_cached, v_cached, kq, vq, phys_new)
+            cks = kvc.paged_scatter(kv_scales[0], ksc, phys_new)
+            cvs = kvc.paged_scatter(kv_scales[1], vsc, phys_new)
+            attn_out = nn.gqa_attention_quant(
+                q, kvc.paged_gather(ck, view_idx),
+                kvc.paged_gather(cks, view_idx),
+                kvc.paged_gather(cv, view_idx),
+                kvc.paged_gather(cvs, view_idx), mask, cfg.attn_softcap)
+            new_cache = (ck, cv, cks, cvs)
+        else:
+            ck, cv = kvc.paged_write_kv(k_cached, v_cached, k_new, v_new,
+                                        phys_new)
+            attn_out = nn.gqa_attention(q, kvc.paged_gather(ck, view_idx),
+                                        kvc.paged_gather(cv, view_idx),
+                                        mask, cfg.attn_softcap)
+            new_cache = (ck, cv)
+    elif k_cached is not None:
         if cfg.kv_quant:
             kq, ksc = kvc.kv_quantize(k_new)
             vq, vsc = kvc.kv_quantize(v_new)
@@ -247,6 +278,29 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int):
     return layers, axes
 
 
+def make_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     block_size: int = kvc.PAGE_BLOCK,
+                     pool_blocks: int | None = None):
+    """Pool-shaped attention KV for a paged state.  Cross-attention KV
+    (whisper) stays per-row: the encoder context is fixed-length and never
+    appended to, so paging it buys nothing."""
+    R = kvc._ceil_div(max_len, block_size)
+    P = pool_blocks if pool_blocks is not None else batch * R
+    layers = kvc.make_paged_attn_cache(cfg.num_layers, P, block_size,
+                                       cfg.num_kv_heads, cfg.head_dim,
+                                       cfg.dtype, quant=cfg.kv_quant)
+    axes = kvc.paged_attn_cache_axes(quant=cfg.kv_quant)
+    if cfg.encdec is not None:
+        e = cfg.encdec
+        shape = (cfg.num_layers, batch, e.num_encoder_positions,
+                 cfg.num_kv_heads, cfg.head_dim)
+        layers["cross_k"] = jnp.zeros(shape, cfg.dtype)
+        layers["cross_v"] = jnp.zeros(shape, cfg.dtype)
+        axes["cross_k"] = ("layers", "batch", "enc_seq", "kv_heads", "head_dim")
+        axes["cross_v"] = ("layers", "batch", "enc_seq", "kv_heads", "head_dim")
+    return layers, axes
+
+
 def precompute_cross_kv(params, cfg: ModelConfig, enc_states):
     """Whisper: compute per-layer cross K/V from encoder output once."""
     def one(pl):
@@ -283,6 +337,7 @@ def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
     state, q_pos, slot = kvc.append_tokens(state, tokens, valid,
                                            spec_depth=spec_depth)
     B, T = tokens.shape
+    paged = isinstance(state, kvc.PagedModelState)
     x = input_embeds if input_embeds is not None else _embed(params, cfg, tokens)
     if cfg.learned_positions:
         safe = jnp.clip(q_pos, 0, cfg.max_position - 1)
@@ -294,13 +349,26 @@ def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
                                      window=cfg.sliding_window)
              if cfg.sliding_window > 0 else m_full)
     if spec_attend is not None:
-        region_start = slot + T - spec_attend.shape[1]
-        m_full = nn.overlay_block_mask(m_full, state.mask,
-                                       jnp.asarray(spec_attend), region_start)
-        if cfg.sliding_window > 0:
-            m_win = nn.overlay_block_mask(m_win, state.mask,
-                                          jnp.asarray(spec_attend),
-                                          region_start)
+        spec_attend = jnp.asarray(spec_attend)
+        if paged:
+            appended = (valid.any(axis=1) if valid is not None
+                        else jnp.ones((B,), jnp.bool_))
+            cols = kvc.tree_region_cols(state, spec_attend.shape[1],
+                                        appended)
+            m_full = nn.overlay_block_mask_at(m_full, state.mask,
+                                              spec_attend, cols)
+            if cfg.sliding_window > 0:
+                m_win = nn.overlay_block_mask_at(m_win, state.mask,
+                                                 spec_attend, cols)
+        else:
+            region_start = slot + T - spec_attend.shape[1]
+            m_full = nn.overlay_block_mask(m_full, state.mask,
+                                           spec_attend, region_start)
+            if cfg.sliding_window > 0:
+                m_win = nn.overlay_block_mask(m_win, state.mask,
+                                              spec_attend, region_start)
+    paged_idx = ((kvc.physical_slots(state, slot),
+                  kvc.physical_view_index(state)) if paged else None)
     if mrope_positions is None:
         q_pos3 = jnp.repeat(q_pos[..., None], 3, axis=-1)
     else:
@@ -325,7 +393,8 @@ def forward_cached(params, cfg: ModelConfig, state: kvc.ModelState,
         x, caches = _block(
             s["pl"], cfg, x, k_cached=s["ck"], v_cached=s["cv"], mask=mask,
             q_pos3=q_pos3, theta=s["theta"], cross_kv=cross,
-            write_slot=slot, kv_scales=scales)
+            write_slot=None if paged else slot, kv_scales=scales,
+            paged_idx=paged_idx)
         out = {"k": caches[0], "v": caches[1]}
         if cfg.kv_quant:
             out["k_scale"], out["v_scale"] = caches[2], caches[3]

@@ -63,14 +63,17 @@ class ServingEngine:
                  batch_size: int = 4, batch_wait_s: float = 0.25,
                  slo_latency_s: float = 30.0,
                  router_kwargs: Optional[dict] = None,
-                 continuous: bool = True):
+                 continuous: bool = True,
+                 paged: Optional[bool] = None):
         self.pool = pool
         self.target = target
         self.batch_size = batch_size       # slot count in continuous mode
         self.batch_wait_s = batch_wait_s   # legacy batch-formation window
         self.slo = slo_latency_s
         self.continuous = continuous
-        self.router_kwargs = router_kwargs or {}
+        self.router_kwargs = dict(router_kwargs or {})
+        if paged is not None:              # engine-level A/B convenience
+            self.router_kwargs.setdefault("paged", paged)
         # one router per engine: jit caches and scheduler state persist
         # across batches (recompiling per batch would bill compilation to
         # every request's latency)
@@ -90,15 +93,41 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def _run_continuous(self, reqs: List[Request]) -> List[float]:
         B = self.batch_size
-        # session capacity: the longest single request's footprint, doubled
-        # for cross-slot fragmentation headroom (the router force-defrags
-        # and, as a last resort, rebuilds states under capacity pressure)
         router = self._router
         lmax = max(len(r.prompt) + 2 * r.max_new_tokens + 2 for r in reqs)
         # max_block covers the widest per-cycle append: a linear window or
         # a whole token tree (tree mode appends all N nodes per cycle)
-        max_len = 2 * lmax + router.gcap + \
+        margin = router.gcap + \
             (router.max_block + router.scheduler.max_chain_len) * 4
+        # per-row sizing is only safe when EVERY pool member actually runs
+        # the paged state: SSM/hybrid archs silently keep the contiguous
+        # shared-pointer layout (ModelConfig.supports_paged), which still
+        # burns cross-slot capacity under churn and needs the old headroom
+        all_paged = router.paged and all(
+            self.pool.cfg(m).supports_paged for m in self.pool.names())
+        if all_paged:
+            # block accounting: capacity is PER ROW — a slot only needs the
+            # longest single request's own footprint (plus per-cycle
+            # speculation margin); churn costs nothing because retirement
+            # returns the row's blocks to the pool.  Tree shapes leave
+            # masked dead-branch holes INSIDE a row (only trailing slots
+            # are reclaimed; paged rows have no compaction path), so a
+            # tree-configured router gets the hole-inclusive worst case:
+            # a cycle commits >= 1 token but can strand up to the whole
+            # N-node block, i.e. footprint <= prompt + budget·(N + gap).
+            trees = router.tree_shapes + (
+                (router.fixed_tree,) if router.fixed_tree is not None else ())
+            if trees:
+                n_max = max(t.num_nodes for t in trees)
+                lmax = max(lmax,
+                           max(len(r.prompt) + r.max_new_tokens * (n_max + 2)
+                               for r in reqs))
+            max_len = lmax + margin
+        else:
+            # contiguous shared-pointer state: double for cross-slot
+            # fragmentation headroom (the router force-defrags and, as a
+            # last resort, rebuilds states under capacity pressure)
+            max_len = 2 * lmax + margin
         # pow-2 capacity buckets: session state shapes (and thus every
         # jitted program) are shared across workloads of similar size
         # instead of recompiling per run
@@ -216,6 +245,16 @@ class ServingEngine:
     def _metrics(self, reqs: List[Request],
                  acc_lens: List[float]) -> ServingMetrics:
         done = [r for r in reqs if r.finish_s >= 0]
+        if not done:
+            # degenerate run (nothing finished): NaN-safe metrics instead
+            # of max()/mean() raising on empty sequences
+            nan = float("nan")
+            return ServingMetrics(
+                goodput_tps=nan, request_throughput_rps=nan,
+                avg_ttft_s=nan, p95_ttft_s=nan, avg_tpot_s=nan,
+                avg_latency_s=nan, p95_latency_s=nan, slo_attainment=nan,
+                total_tokens=0, num_requests=0, makespan_s=0.0,
+                avg_acceptance_len=0.0, avg_queue_s=0.0)
         total_tokens = sum(r.generated for r in done)
         makespan = max(r.finish_s for r in done) - min(r.arrival_s
                                                        for r in done)
@@ -224,9 +263,12 @@ class ServingEngine:
         tpots = np.array([r.tpot for r in done if np.isfinite(r.tpot)])
         queues = np.array([r.queue_delay for r in done
                            if np.isfinite(r.queue_delay)])
+        # a single instant request gives makespan == 0 — rates are
+        # undefined there, not infinite
+        rate_denom = makespan if makespan > 0 else float("nan")
         return ServingMetrics(
-            goodput_tps=total_tokens / makespan,
-            request_throughput_rps=len(done) / makespan,
+            goodput_tps=total_tokens / rate_denom,
+            request_throughput_rps=len(done) / rate_denom,
             avg_ttft_s=float(ttfts.mean()),
             p95_ttft_s=float(np.percentile(ttfts, 95)),
             avg_tpot_s=float(tpots.mean()) if tpots.size else float("nan"),

@@ -1,0 +1,385 @@
+"""Paged KV cache (per-slot block tables + block pool): state invariants,
+forward/rollback/resolve parity with the contiguous layout, the paged
+flash-decode kernel vs its jnp oracle, and the headline churn regression —
+one long-lived slot plus admission churn must run with ZERO defragment /
+reprefill escapes while staying bit-identical to target-only decoding."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChainRouter, ModelPool
+from repro.core.state_manager import StateManager
+from repro.kernels import ops, ref
+from repro.models import ModelConfig
+from repro.models import kv_cache as kvc
+from repro.models.model import LanguageModel
+
+
+def tiny_cfg(**kw):
+    d = dict(name="t", arch_type="dense", num_layers=2, d_model=32,
+             num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=41,
+             dtype=jnp.float32)
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    p = ModelPool()
+    for (n, L, d, s) in [("s", 2, 32, 1), ("t", 3, 48, 2)]:
+        cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
+                          d_model=d, num_heads=4, num_kv_heads=2,
+                          d_ff=2 * d, vocab_size=64, dtype=jnp.float32)
+        lm = LanguageModel(cfg)
+        params, axes = lm.init(jax.random.PRNGKey(s))
+        p.register(cfg, params=params, param_axes=axes)
+    return p
+
+
+def _pool_invariant(st: kvc.PagedModelState):
+    """Allocated table entries + free-stack prefix partition the pool."""
+    tab = np.asarray(st.block_table)
+    nb = np.asarray(st.num_blocks)
+    owned = [int(tab[b, j]) for b in range(tab.shape[0])
+             for j in range(int(nb[b]))]
+    assert all(x >= 0 for x in owned)
+    free = np.asarray(st.free_stack)[:int(st.free_top)].tolist()
+    assert sorted(owned + free) == list(range(st.pool_blocks))
+
+
+def _stream(st, b):
+    order = np.argsort(np.where(st.mask[b], st.pos_buf[b], 1 << 30))
+    return np.asarray(st.token_buf[b])[order][:int(st.length[b])]
+
+
+# ---------------------------------------------------------------------------
+# state-level invariants
+# ---------------------------------------------------------------------------
+def test_paged_append_rollback_stream_consistency():
+    """Interleaved appends (with masked no-op rows) and divergent rollbacks
+    keep each row's logical stream equal to a plain-Python reference, with
+    the block pool always exactly partitioned."""
+    rng = np.random.default_rng(0)
+    st = kvc.make_paged_state(3, 64, {}, block_size=8)
+    refs = [[], [], []]
+    tok = 1
+    for step in range(12):
+        T = int(rng.integers(1, 5))
+        valid = rng.random((3, T)) < 0.8
+        toks = np.arange(tok, tok + 3 * T).reshape(3, T).astype(np.int32)
+        tok += 3 * T
+        st, _, _ = kvc.append_tokens(st, jnp.asarray(toks),
+                                     jnp.asarray(valid))
+        for b in range(3):
+            refs[b].extend(toks[b, valid[b]].tolist())
+        r = [int(rng.integers(0, min(3, len(refs[b])) + 1)) for b in range(3)]
+        st = kvc.rollback(st, jnp.asarray(r))
+        for b in range(3):
+            if r[b]:
+                del refs[b][-r[b]:]
+        _pool_invariant(st)
+        # per-row reclaim: linear rollback leaves NO holes at all
+        assert float(kvc.fragmentation(st)) == 0.0
+    for b in range(3):
+        np.testing.assert_array_equal(_stream(st, b), refs[b])
+        assert int(st.write_ptr[b]) == len(refs[b])
+
+
+def test_paged_free_rows_returns_blocks_o1():
+    """Retiring a row pushes all its blocks back; repeated admit/retire
+    cycles never grow pool usage (the contiguous shared pointer grows by
+    O(appended) per admission instead)."""
+    st = kvc.make_paged_state(2, 64, {}, block_size=8)
+    # long-lived row 0
+    st, _, _ = kvc.append_tokens(st, jnp.arange(40).reshape(2, 20).astype(
+        jnp.int32), jnp.asarray([[True] * 20, [False] * 20]))
+    baseline = int(kvc.blocks_in_use(st))
+    for i in range(10):
+        toks = jnp.full((2, 12), i + 1, jnp.int32)
+        st, _, _ = kvc.append_tokens(
+            st, toks, jnp.asarray([[False] * 12, [True] * 12]))
+        st = kvc.free_rows(st, np.array([False, True]))
+        _pool_invariant(st)
+        assert int(kvc.blocks_in_use(st)) == baseline   # no churn leak
+        assert int(st.num_blocks[1]) == 0
+        assert int(st.write_ptr[1]) == 0
+    np.testing.assert_array_equal(_stream(st, 0), np.arange(20))
+
+
+def test_paged_alloc_exhaustion_keeps_accounting_honest():
+    """Pool underflow must not mint phantom blocks: num_blocks counts only
+    pops that succeeded, so the host-side block accounting still sees the
+    shortfall and the capacity guard can rebuild instead of letting writes
+    silently drop."""
+    st = kvc.make_paged_state(2, 64, {}, block_size=8, pool_blocks=3)
+    st, _, _ = kvc.append_tokens(st, jnp.zeros((2, 16), jnp.int32))
+    assert int(st.free_top) == 0
+    assert int(jnp.sum(st.num_blocks)) == 3      # 4 were needed, 3 existed
+    _pool_invariant(st)
+    # the guard's arithmetic (ChainRouter._ensure_capacity) sees the hole
+    wp, nb = np.asarray(st.write_ptr), np.asarray(st.num_blocks)
+    shortfall = np.maximum(-(-(wp + 1) // st.block_size) - nb, 0)
+    assert shortfall.sum() > 0
+
+
+def test_paged_resolve_tree_matches_contiguous():
+    """Settling a speculative tree block (winning path kept, dead branches
+    masked) leaves the same logical stream in both layouts."""
+    def run(paged):
+        st = (kvc.make_paged_state(2, 64, {}, block_size=8) if paged
+              else kvc.make_state(2, 64, {}))
+        st, _, _ = kvc.append_tokens(
+            st, jnp.arange(10).reshape(2, 5).astype(jnp.int32))
+        # 6-node tree block: depths 0,0,1,1,2,2; row0 keeps path [0,2,4],
+        # row1 keeps [1,3] (depth-2 node rejected)
+        depth = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+        nodes = jnp.asarray([[10, 11, 12, 13, 14, 15],
+                             [20, 21, 22, 23, 24, 25]], jnp.int32)
+        st, _, _ = kvc.append_tokens(st, nodes, spec_depth=depth)
+        keep = jnp.asarray([[1, 0, 1, 0, 1, 0],
+                            [0, 1, 0, 1, 0, 0]], bool)
+        st = kvc.resolve_tree(st, 6, keep, jnp.asarray([3, 2], jnp.int32),
+                              active=jnp.asarray([True, True]))
+        return st
+    for paged in (False, True):
+        st = run(paged)
+        np.testing.assert_array_equal(_stream(st, 0),
+                                      [0, 1, 2, 3, 4, 10, 12, 14])
+        np.testing.assert_array_equal(_stream(st, 1),
+                                      [5, 6, 7, 8, 9, 21, 23])
+        if paged:
+            _pool_invariant(st)
+
+
+def test_paged_resolve_tree_inactive_row_untouched():
+    """A row that sat the tree cycle out must keep its committed trailing
+    slots — the paged resolver is gated by ``active``."""
+    st = kvc.make_paged_state(2, 64, {}, block_size=8)
+    st, _, _ = kvc.append_tokens(
+        st, jnp.arange(12).reshape(2, 6).astype(jnp.int32))
+    depth = jnp.asarray([0, 1], jnp.int32)
+    active = jnp.asarray([True, False])
+    st, _, _ = kvc.append_tokens(
+        st, jnp.asarray([[30, 31], [0, 0]], jnp.int32),
+        valid=jnp.broadcast_to(active[:, None], (2, 2)), spec_depth=depth)
+    st = kvc.resolve_tree(st, 2, jnp.asarray([[1, 1], [0, 0]], bool),
+                          jnp.asarray([2, 0], jnp.int32), active=active)
+    np.testing.assert_array_equal(_stream(st, 0), [0, 1, 2, 3, 4, 5, 30, 31])
+    np.testing.assert_array_equal(_stream(st, 1), [6, 7, 8, 9, 10, 11])
+
+
+# ---------------------------------------------------------------------------
+# model-level parity
+# ---------------------------------------------------------------------------
+def test_paged_rollback_equals_recompute():
+    """Decode, divergent rollback, decode again == decoding the truncated
+    stream from scratch — in the paged layout."""
+    cfg = tiny_cfg()
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    base = jnp.array([[5, 6, 7], [8, 9, 10]], jnp.int32)
+    extra = jnp.array([[11, 12, 13, 14], [15, 16, 17, 18]], jnp.int32)
+    nxt = jnp.array([[21], [23]], jnp.int32)
+
+    st1, _ = lm.make_state(2, 32, paged=True, block_size=8)
+    _, st1 = lm.prefill(params, st1, base)
+    _, st1 = lm.decode(params, st1, extra)
+    st1 = lm.rollback(st1, jnp.array([1, 3]))
+    lg1, _ = lm.decode(params, st1, nxt)
+
+    st2, _ = lm.make_state(2, 32, paged=True, block_size=8)
+    _, st2 = lm.prefill(params, st2, base)
+    _, st2 = lm.decode(params, st2, extra[:, :3],
+                       valid=jnp.asarray([[True] * 3,
+                                          [True, False, False]]))
+    lg2, _ = lm.decode(params, st2, nxt)
+    np.testing.assert_array_equal(np.asarray(lg1), np.asarray(lg2))
+
+
+def test_paged_forward_matches_contiguous():
+    """Same prefill/decode through both layouts gives identical logits
+    (float32 — both programs compute the identical masked attention)."""
+    cfg = tiny_cfg()
+    lm = LanguageModel(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(1))
+    base = jnp.array([[3, 4, 5], [6, 7, 8]], jnp.int32)
+    steps = [jnp.array([[9, 10], [11, 12]], jnp.int32),
+             jnp.array([[13], [14]], jnp.int32)]
+
+    def run(paged):
+        st, _ = lm.make_state(2, 32, paged=paged, block_size=8)
+        outs = []
+        lg, st = lm.prefill(params, st, base)
+        outs.append(lg)
+        for t in steps:
+            lg, st = lm.decode(params, st, t)
+            outs.append(lg)
+        return [np.asarray(o) for o in outs]
+
+    for a, b in zip(run(False), run(True)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode kernel vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("T", [1, 5])
+def test_paged_attention_kernel_matches_ref(T):
+    rng = np.random.default_rng(3)
+    P, bs, Hkv, D, B, R, g = 12, 8, 2, 24, 3, 3, 3
+    H, S = Hkv * g, 3 * 8
+    k_flat = jnp.asarray(rng.normal(size=(P * bs, Hkv, D)).astype(np.float32))
+    v_flat = jnp.asarray(rng.normal(size=(P * bs, Hkv, D)).astype(np.float32))
+    tbl = np.full((B, R), -1, np.int32)      # includes unallocated blocks
+    used = rng.permutation(P)[:7]
+    tbl[0, :3] = used[:3]
+    tbl[1, :2] = used[3:5]
+    tbl[2, :2] = used[5:7]
+    q = jnp.asarray(rng.normal(size=(B, T, H, D)).astype(np.float32))
+    mask = np.zeros((B, T, S), bool)
+    mask[0, :, :20] = True
+    mask[1, :, :10] = True
+    mask[2, :, :13] = True
+    if T > 1:                                 # ragged per-query (tree) rows
+        mask[0, 1, 15:20] = False
+        mask[2, 3, :] = False                 # fully-masked query row
+    m = jnp.asarray(mask)
+    kp = k_flat.reshape(P, bs, Hkv, D)
+    vp = v_flat.reshape(P, bs, Hkv, D)
+    want = np.asarray(ref.paged_attention_ref(q, kp, vp, jnp.asarray(tbl), m))
+    got = np.asarray(ops.paged_decode_attention(
+        q, k_flat, v_flat, jnp.asarray(tbl), m, bs))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    if T > 1:
+        assert np.all(got[2, 3] == 0)        # fully masked -> zeros, no NaN
+
+
+def test_paged_kernel_single_token_equals_tree_t1():
+    """The T=1 paged call reproduces the gathered single-token decode —
+    one kernel subsumes both serving cases."""
+    rng = np.random.default_rng(4)
+    P, bs, Hkv, D, B, R = 6, 8, 2, 16, 2, 3
+    H, S = 4, R * bs
+    k_flat = jnp.asarray(rng.normal(size=(P * bs, Hkv, D)).astype(np.float32))
+    v_flat = jnp.asarray(rng.normal(size=(P * bs, Hkv, D)).astype(np.float32))
+    tbl = jnp.asarray([[0, 2, -1], [1, -1, -1]], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)).astype(np.float32))
+    mask = np.zeros((B, 1, S), bool)
+    mask[0, :, :11] = True
+    mask[1, :, :7] = True
+    got = np.asarray(ops.paged_decode_attention(
+        q, k_flat, v_flat, tbl, jnp.asarray(mask), bs))
+    # oracle: gather the rows' views and run the plain decode reference
+    flat = np.asarray(kvc.paged_gather(
+        k_flat, _view_idx(np.asarray(tbl), bs, S)))
+    flatv = np.asarray(kvc.paged_gather(
+        v_flat, _view_idx(np.asarray(tbl), bs, S)))
+    want = np.asarray(ref.masked_decode_attention_ref(
+        q[:, 0], jnp.asarray(flat), jnp.asarray(flatv),
+        jnp.asarray(mask[:, 0])))
+    np.testing.assert_allclose(got[:, 0], want, rtol=2e-5, atol=2e-5)
+
+
+def _view_idx(tbl, bs, S):
+    s = np.arange(S)
+    pid = tbl[:, s // bs]
+    return jnp.asarray(np.maximum(pid, 0) * bs + s % bs)
+
+
+# ---------------------------------------------------------------------------
+# headline churn regression
+# ---------------------------------------------------------------------------
+def test_churn_zero_defrag_reprefill_and_bit_exact(pool):
+    """One long-lived slot plus repeated admit/retire churn in the other:
+    paged mode must never hit the defragment or reprefill escape hatches
+    (the contiguous shared pointer burns capacity at O(cycles) and does),
+    and every stream must stay bit-identical to target-only decoding."""
+    rng = np.random.default_rng(7)
+    long_prompt = rng.integers(1, 64, size=8).astype(np.int64)
+    shorts = [rng.integers(1, 64, size=6).astype(np.int64) for _ in range(8)]
+    # sized so the long request ALONE fits a row comfortably (~70 slots
+    # peak) but the contiguous shared pointer — which permanently leaks
+    # each retired admission's slots once the long row appends above them —
+    # exhausts and must defragment/rebuild
+    max_len = 128
+
+    def churn(paged):
+        router = ChainRouter(pool, "t", adaptive=False,
+                             fixed_chain=("s", "t"), fixed_window=3,
+                             paged=paged)
+        sess = router.start_session(2, max_len, session_id="churn")
+        sess.admit(0, long_prompt, 40)
+        outs = []
+        for sp in shorts:
+            sess.admit(1, sp, 4)
+            while sess.active[1]:
+                sess.run_cycle()
+            outs.append(sess.retire(1))
+        while sess.active[0]:
+            sess.run_cycle()
+        st = router.states.get(StateManager.key("t", "churn"))
+        is_paged = isinstance(st, kvc.PagedModelState)
+        long_out = sess.retire(0)
+        sess.close()
+        counters = dict(router.profiler.counters)
+        return long_out, outs, counters, is_paged
+
+    long_p, shorts_p, counters_p, was_paged = churn(True)
+    # THE acceptance criterion: zero escape hatches in paged mode
+    bad = {k: v for k, v in counters_p.items()
+           if k.startswith("defrag.") or k.startswith("reprefill.")}
+    assert not bad, f"paged churn tripped capacity escapes: {bad}"
+
+    assert was_paged          # the session really ran on the paged layout
+
+    # contiguous A/B on the SAME sizing: the shared write pointer must hit
+    # the escape hatches (this is the bug being fixed)
+    long_c, shorts_c, counters_c, was_paged_c = churn(False)
+    assert not was_paged_c
+    assert any(k.startswith("defrag.") or k.startswith("reprefill.")
+               for k in counters_c), (
+        "contiguous baseline unexpectedly survived churn — "
+        "tighten the workload so the regression test stays sharp")
+
+    # bit-exact greedy parity: paged churn output == target-only reference
+    ref_router = ChainRouter(pool, "t", adaptive=False, fixed_chain=("t",),
+                             fixed_window=1, paged=True)
+    ref_long = ref_router.generate(long_prompt[None, :], np.array([8]), 40,
+                                   request_id="ref-long")
+    np.testing.assert_array_equal(long_p, ref_long.generated[0])
+    for i, sp in enumerate(shorts):
+        r = ref_router.generate(sp[None, :], np.array([6]), 4,
+                                request_id=f"ref-s{i}")
+        np.testing.assert_array_equal(shorts_p[i], r.generated[0])
+    # and the contiguous run decodes the same streams (same greedy argmax)
+    np.testing.assert_array_equal(long_p, long_c)
+    for a, b in zip(shorts_p, shorts_c):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_paged_session_blocks_bounded_under_churn(pool):
+    """Block accounting stays bounded: pool usage after each retire returns
+    to the long-lived row's own footprint (no cross-slot leak)."""
+    rng = np.random.default_rng(8)
+    router = ChainRouter(pool, "t", adaptive=False, fixed_chain=("s", "t"),
+                         fixed_window=3, paged=True)
+    sess = router.start_session(2, 192, session_id="bounded")
+    sess.admit(0, rng.integers(1, 64, size=8).astype(np.int64), 24)
+    usage = []
+    for i in range(4):
+        sess.admit(1, rng.integers(1, 64, size=6).astype(np.int64), 4)
+        while sess.active[1]:
+            sess.run_cycle()
+        sess.retire(1)
+        st = router.states.get(StateManager.key("t", "bounded"))
+        assert isinstance(st, kvc.PagedModelState)
+        assert int(st.num_blocks[1]) == 0
+        usage.append(int(kvc.blocks_in_use(st)))
+        _pool_invariant(st)
+    # the retired slot's blocks always come back; usage tracks only the
+    # long row's (monotone but bounded by its own footprint) growth
+    assert usage[-1] <= usage[0] + (24 // st.block_size + 2)
+    sess.close()

@@ -97,6 +97,47 @@ def test_candidate_chains_end_with_target():
     assert ("t",) in sched.candidate_chains()
 
 
+def test_memoized_until_inputs_drift():
+    """With reschedule_every=1 the full Eq. 7 sweep used to run every
+    cycle; now it reuses the previous argmin until a profiler/similarity
+    EMA moves by more than reuse_rtol."""
+    prof = PerformanceProfiler()
+    prof.record("decode1", "d", 0.001)
+    prof.record("decode1", "t", 0.1)
+    store = SimilarityStore()
+    store.update("d", "t", 0.1)
+    sched = ModelChainScheduler(["d", "t"], "t", prof, store,
+                                {"d": 1, "t": 100})
+    c1 = sched.get_optimal_chain()
+    c2 = sched.get_optimal_chain()
+    assert sched.eval_count == 1 and sched.reuse_count == 1
+    assert c2 is c1
+    # sub-threshold EMA drift keeps the memo
+    prof.record("decode1", "d", 0.001 * 1.0001)
+    assert sched.get_optimal_chain() is c1
+    assert sched.eval_count == 1
+    # a real change invalidates it
+    for _ in range(8):
+        prof.record("decode1", "t", 0.4)
+    sched.get_optimal_chain()
+    assert sched.eval_count == 2
+    # a NEW observation key (first verify EMA) also invalidates
+    prof.record("verify", "t", 0.2, block=5)
+    sched.get_optimal_chain()
+    assert sched.eval_count == 3
+
+
+def test_memoization_disabled_with_zero_rtol():
+    prof = PerformanceProfiler()
+    prof.record("decode1", "d", 0.001)
+    prof.record("decode1", "t", 0.1)
+    sched = ModelChainScheduler(["d", "t"], "t", prof, SimilarityStore(),
+                                {"d": 1, "t": 100}, reuse_rtol=0.0)
+    sched.get_optimal_chain()
+    sched.get_optimal_chain()
+    assert sched.eval_count == 2 and sched.reuse_count == 0
+
+
 def test_window_is_searched():
     prof = PerformanceProfiler()
     prof.record("decode1", "d", 0.001)

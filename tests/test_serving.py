@@ -44,6 +44,46 @@ def test_engine_end_to_end(pool):
         assert 0 < r.generated <= r.max_new_tokens
 
 
+def test_metrics_nan_safe_on_degenerate_runs(pool):
+    """Empty done-set and zero makespan must yield NaN-safe metrics, not
+    ZeroDivisionError / ValueError on max() of an empty sequence."""
+    from repro.data.workload import Request
+    eng = ServingEngine(pool, "t")
+    m0 = eng._metrics([], [])
+    assert m0.num_requests == 0 and m0.total_tokens == 0
+    assert np.isnan(m0.goodput_tps) and np.isnan(m0.avg_ttft_s)
+
+    # single instant request: finish == arrival -> makespan == 0
+    r = Request("r0", 1.0, np.array([1, 2]), 4, "synthetic",
+                start_s=1.0, first_token_s=1.0, finish_s=1.0, generated=4)
+    m1 = eng._metrics([r], [1.0])
+    assert m1.makespan_s == 0.0
+    assert np.isnan(m1.goodput_tps) and np.isnan(m1.request_throughput_rps)
+    assert m1.num_requests == 1 and m1.total_tokens == 4
+    assert np.isfinite(m1.avg_ttft_s)
+
+
+def test_termination_scans_only_new_commits(pool):
+    """The EOS scan is bounded to this cycle's commits: a token equal to
+    EOS sitting in the already-scanned region is never re-examined (and
+    the full-scan fallback without scan_from still finds it)."""
+    from repro.core import ChainRouter
+    router = ChainRouter(pool, "t", eos_token=9)
+    seq = np.zeros((1, 32), np.int32)
+    seq[0, :8] = [1, 2, 3, 9, 5, 6, 7, 8]     # "EOS" at committed pos 3
+    seq_len = np.array([8], np.int64)
+    prompt = np.array([2], np.int64)
+    budget = np.array([20], np.int64)
+    active = np.array([True])
+    # scan_from = 7: only the last commit (token 8) is examined
+    router._apply_termination(seq, seq_len, prompt, budget, active,
+                              scan_from=np.array([7]))
+    assert active[0] and seq_len[0] == 8
+    # fallback full scan (no scan_from) finds the stale EOS
+    router._apply_termination(seq, seq_len, prompt, budget, active)
+    assert not active[0] and seq_len[0] == 2 + 2
+
+
 def test_engine_batches_respect_arrival_order(pool):
     corpus = SyntheticCorpus(CorpusConfig(vocab_size=64))
     reqs = make_workload(corpus, "mgsm", rate_rps=3.0, duration_s=2.0,
