@@ -21,13 +21,15 @@ def main() -> None:
                          "continuous batching (A/B baseline)")
     ap.add_argument("--skip-tree", action="store_true",
                     help="skip the linear-vs-tree speculation A/B")
+    ap.add_argument("--skip-routing", action="store_true",
+                    help="skip the per-slot vs global-chain routing A/B")
     ap.add_argument("--tree-shapes", default=None,
                     help="comma-separated tree shapes for the A/B, e.g. "
                          "'1x1x1,2x1x1,2x2x1' (equal depth; default: a "
                          "depth-4 sweep)")
     args = ap.parse_args()
 
-    from . import (analytic_model, chain_selection, roofline,
+    from . import (analytic_model, chain_selection, roofline, routing_ab,
                    serving_metrics, table2_speedup, tree_ab)
 
     t0 = time.time()
@@ -56,6 +58,10 @@ def main() -> None:
         else:
             shapes = (("1x1x1", "2x2x1") if args.quick else tree_ab.SHAPES)
         tree_ab.main(shapes=shapes, max_new=12 if args.quick else 24)
+
+    if not args.skip_routing:
+        print("# routing_ab (per-slot lazy routing vs global-chain)")
+        routing_ab.main(n_reqs=6 if args.quick else 10)
 
     if not args.skip_serving:
         print("# serving_metrics (paper SS5 metrics)")

@@ -9,6 +9,8 @@ baselines for the EAF speedup.
                             # the shape joins SpecRouter's search space)
         [--no-continuous]   # legacy stop-the-world batch formation
         [--no-paged]        # legacy contiguous shared-pointer KV (A/B)
+        [--no-slot-routing] # legacy global-chain routing: one chain per
+                            # cycle, whole pool prefilled at admission
 """
 import argparse
 
@@ -20,7 +22,8 @@ from repro.train.pool import build_trained_pool
 
 
 def run(pool, corpus, args, label, router_kwargs):
-    router_kwargs = dict(router_kwargs, paged=not args.no_paged)
+    router_kwargs = dict(router_kwargs, paged=not args.no_paged,
+                         slot_routing=not args.no_slot_routing)
     reqs = make_workload(corpus, args.dataset, args.rate, args.duration,
                          seed=7)
     eng = ServingEngine(pool, "demo-7b", batch_size=args.batch,
@@ -54,6 +57,10 @@ def main():
     ap.add_argument("--no-paged", action="store_true",
                     help="legacy contiguous shared-pointer KV state "
                          "instead of the paged per-slot block tables (A/B)")
+    ap.add_argument("--no-slot-routing", action="store_true",
+                    help="legacy global-chain routing — one chain for "
+                         "every slot per cycle and O(pool) admission "
+                         "prefill — instead of per-slot lazy chains (A/B)")
     args = ap.parse_args()
 
     pool, corpus = build_trained_pool(steps=args.steps)

@@ -6,7 +6,9 @@ from .model_pool import DeviceManager, ModelPool
 from .profiler import EMA, PerformanceProfiler
 from .scheduler import (ChainChoice, ModelChainScheduler, expected_accepted,
                         expected_tree_accepted)
-from .similarity import SimilarityStore, acceptance_from_sim, pairwise_dtv
+from .similarity import (SimilarityStore, SlotSimilarity,
+                         acceptance_from_sim, pairwise_dtv,
+                         pairwise_dtv_rows)
 from .state_manager import StateManager
 from .token_tree import TokenTree
 from . import verification

@@ -25,9 +25,25 @@ wrapper over the same session machinery: admit all rows, cycle until every
 row terminates.  Slots are batch rows of ONE per-model session state
 (key ``model/session_id``), so admission/retirement is per-row state
 surgery (Executor.insert / Executor.retire), not state re-creation.
+
+Per-slot chain routing with LAZY chain membership (default): every slot
+carries its own ``ChainChoice`` — the admission-time similarity probe and
+the slot's per-row verify feedback drive ``get_optimal_chain(slot)`` with
+the global Eq. 7 memo as the shared prior — and a slot materializes state
+ONLY in the models of its assigned chain.  Admission therefore prefills
+O(chain) models, not O(pool); retirement frees only those rows; a model
+joining a slot's chain later catches up through the ``_insert_row`` path
+(priced by the scheduler's switch penalty).  ``run_cycle`` groups active
+slots by assigned (chain, window, tree) and runs one active-masked
+sub-cycle per group, so every jitted shape stays static and greedy output
+remains bit-exact to target-only decoding per slot regardless of
+grouping.  ``slot_routing=False`` restores the legacy behaviour — one
+global chain per cycle, every pool model prefilled at admission — as the
+A/B baseline (``benchmarks/routing_ab.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -42,7 +58,7 @@ from .executor import (DraftRequest, DraftTreeRequest, Executor,
 from .model_pool import ModelPool
 from .profiler import PerformanceProfiler
 from .scheduler import ChainChoice, ModelChainScheduler
-from .similarity import SimilarityStore, pairwise_dtv
+from .similarity import SimilarityStore, pairwise_dtv, pairwise_dtv_rows
 from .state_manager import StateManager
 from .token_tree import TokenTree
 
@@ -63,12 +79,17 @@ class GenerationResult:
 
 @dataclasses.dataclass
 class CycleReport:
-    """One speculative cycle of a RouterSession."""
+    """One speculative cycle of a RouterSession.  ``chain``/``window``
+    describe the first sub-cycle group (the only group when all slots
+    share a chain); ``groups`` lists every (chain, window, num_slots)
+    sub-cycle the cycle ran."""
     commits: np.ndarray           # (B,) tokens committed per slot
     wall_s: float                 # measured cycle wall time
     chain: Tuple[str, ...]
     window: int
     acc_mean: float               # mean committed over pre-cycle active slots
+    groups: List[Tuple[Tuple[str, ...], int, int]] = \
+        dataclasses.field(default_factory=list)
 
 
 class ChainRouter:
@@ -86,9 +107,17 @@ class ChainRouter:
                  fixed_tree=None,
                  seed: int = 0,
                  paged: bool = True,
+                 slot_routing: bool = True,
+                 scheduler_kwargs: Optional[dict] = None,
                  profiler: Optional[PerformanceProfiler] = None):
         self.pool = pool
         self.target = target
+        # per-slot chain routing + lazy chain membership (the default):
+        # each slot is scheduled independently and holds state only in
+        # its assigned chain's models.  ``slot_routing=False`` keeps the
+        # legacy one-global-chain engine that prefills the WHOLE pool at
+        # admission — the O(pool)-admission baseline for A/B.
+        self.slot_routing = slot_routing
         # paged KV cache (per-slot block tables) is the default serving
         # state; ``paged=False`` keeps the legacy contiguous shared-pointer
         # state for A/B.  Archs without a per-position cache (SSM/hybrid)
@@ -128,7 +157,8 @@ class ChainRouter:
         self.scheduler = ModelChainScheduler(
             pool.names(), target, self.profiler, self.sims,
             pool.capability(), max_chain_len=max_chain_len, windows=windows,
-            tree_shapes=self.tree_shapes, tree_capable=tree_ok)
+            tree_shapes=self.tree_shapes, tree_capable=tree_ok,
+            **(scheduler_kwargs or {}))
         self.rng = jax.random.PRNGKey(seed)
         # static gap-prefix width: one jit shape per (model, Tc).  Tree
         # cycles can leave laggard levels up to depth D behind, so D joins
@@ -147,13 +177,18 @@ class ChainRouter:
         return k
 
     def _prefill_model(self, m: str, request_id: str, seq: np.ndarray,
-                       seq_len: np.ndarray, max_len: int):
-        """(Re-)create model m's state holding seq[:seq_len-1] per row."""
-        S = int(seq_len.max())
+                       seq_len: np.ndarray, max_len: int,
+                       rows: Optional[np.ndarray] = None):
+        """(Re-)create model m's state holding seq[:seq_len-1] per row.
+        ``rows`` (B,) restricts materialization to those slots (lazy chain
+        membership) — other rows stay empty, zero-length, zero-block."""
+        eff_len = (seq_len if rows is None
+                   else np.where(np.asarray(rows, bool), seq_len, 0))
+        S = max(int(eff_len.max()), 1)
         seq = seq[:, :S]
         B = seq.shape[0]
         idx = np.arange(S)[None, :]
-        valid = idx < (seq_len - 1)[:, None]
+        valid = idx < (eff_len - 1)[:, None]
         cfg = self.pool.cfg(m)
         extras = self.pool.model(m).extras_for(B)
         probs, _sid = self.executor.prefill(PrefillRequest(
@@ -182,21 +217,26 @@ class ChainRouter:
             if bucket >= int(gap.max()) + 1:
                 w = bucket
                 break
-        prefix = np.zeros((B, w), np.int32)
-        pvalid = np.zeros((B, w), bool)
-        for b in range(B):
-            g = int(gap[b])
-            if g > 0:   # right-aligned: real tokens contiguous before t_last
-                prefix[b, w - 1 - g:w - 1] = \
-                    seq[b, cache_len[b]:cache_len[b] + g]
-                pvalid[b, w - 1 - g:w - 1] = True
-            prefix[b, -1] = seq[b, seq_len[b] - 1]
-            pvalid[b, -1] = bool(active[b])
+        # vectorized right-aligned gather (hot decode path — the per-row
+        # Python loop was O(B·w) interpreter work per model per cycle):
+        # column c of row b holds seq[b, cache_len[b] + c - (w-1-gap[b])]
+        # for the gap span, then t_last in the final column.
+        cols = np.arange(w)[None, :]                       # (1, w)
+        off = cols - (w - 1 - gap[:, None])                # idx into gap run
+        gmask = (off >= 0) & (cols < w - 1)                # (B, w)
+        src = np.where(gmask, cache_len[:, None] + off, 0)
+        prefix = np.where(
+            gmask, seq[np.arange(B)[:, None], src], 0).astype(np.int32)
+        pvalid = gmask.copy()
+        last = np.maximum(seq_len - 1, 0)
+        prefix[:, -1] = np.where(active, seq[np.arange(B), last], 0)
+        pvalid[:, -1] = active.astype(bool)
         return prefix, pvalid, gap
 
     def _ensure_capacity(self, m: str, request_id: str, needed: int,
                          seq, seq_len, max_len,
-                         rows: Optional[np.ndarray] = None) -> None:
+                         rows: Optional[np.ndarray] = None,
+                         state_rows: Optional[np.ndarray] = None) -> None:
         """Guard against physical buffer exhaustion.  Paged states use
         BLOCK accounting: every row that will append (``rows`` mask; None =
         all — paged appends only consume capacity for writing rows, so the
@@ -227,9 +267,12 @@ class ChainRouter:
                     and int(new_blocks.sum()) <= int(st.free_top)):
                 return
             # no defragment to run — paged rows cannot leak holes into each
-            # other; a genuine overflow means the session was undersized
+            # other; a genuine overflow means the session was undersized.
+            # ``state_rows`` keeps the rebuild scoped to the rows this
+            # model actually holds (lazy chain membership).
             self.states.release(sid)
-            self._prefill_model(m, request_id, seq, seq_len, max_len)
+            self._prefill_model(m, request_id, seq, seq_len, max_len,
+                                rows=state_rows)
             self.profiler.count(f"reprefill.{m}")
             return
         if int(st.write_ptr) + needed <= st.capacity:
@@ -240,67 +283,92 @@ class ChainRouter:
         if int(st.write_ptr) + needed <= st.capacity:
             return
         self.states.release(sid)
-        self._prefill_model(m, request_id, seq, seq_len, max_len)
+        self._prefill_model(m, request_id, seq, seq_len, max_len,
+                            rows=state_rows)
         self.profiler.count(f"reprefill.{m}")
+
+    def _insert_rows(self, m: str, session_id: str, rows: np.ndarray,
+                     seq: np.ndarray, seq_len: np.ndarray, max_len: int,
+                     state_rows: Optional[np.ndarray] = None
+                     ) -> Optional[np.ndarray]:
+        """Catch-up prefill of one or more freed rows into a live session
+        state: ONE masked forward feeds every row in ``rows`` its
+        ``seq[b, :seq_len[b]-1]`` (occupied rows ride along as no-ops) —
+        a group of slots joining the same model in one cycle costs one
+        insert, not one per row.
+
+        Precondition: each row is already free (retire wiped it, or it
+        has been masked-empty since the state was created).
+
+        Returns the (B, V) next-token distributions (rows outside
+        ``rows`` are garbage), or None when there was nothing to feed
+        (1-token prompts, or the capacity guard rebuilt the state — which
+        prefills the new rows too)."""
+        B = seq.shape[0]
+        sid = StateManager.key(m, session_id)
+        rows = np.asarray(rows, bool)
+        n = np.where(rows, seq_len - 1, 0)  # cache invariant: seq[:len-1]
+        if int(n.max()) <= 0:
+            return None
+        w_max = 1                      # reserve for the BUCKETED width: the
+        while w_max < int(n.max()):    # append is w wide, and an under-
+            w_max *= 2                 # reservation would let the slice
+        srows = (rows if state_rows is None      # clamp onto live rows
+                 else (np.asarray(state_rows, bool) | rows))
+        self._ensure_capacity(m, session_id, w_max + 2, seq, seq_len,
+                              max_len, rows=rows, state_rows=srows)
+        done = self.states.lengths(sid)     # re-prefill may have run
+        need = np.where(rows, n - done, 0)
+        if int(need.max()) <= 0:
+            return None
+        w = 1
+        while w < int(need.max()):     # pow-2 width buckets bound jit
+            w *= 2                     # shapes (w <= w_max)
+        tokens = np.zeros((B, w), np.int32)
+        valid = np.zeros((B, w), bool)
+        for b in np.where(need > 0)[0]:
+            tokens[b, :need[b]] = seq[b, done[b]:n[b]]
+            valid[b, :need[b]] = True
+        probs = self.executor.insert(InsertRequest(
+            model=m, request_id=session_id, tokens=tokens, valid=valid))
+        self.profiler.count(f"admit.{m}", float(rows.sum()))
+        return probs
 
     def _insert_row(self, m: str, session_id: str, row: int,
                     seq: np.ndarray, seq_len: np.ndarray,
-                    max_len: int) -> Optional[np.ndarray]:
-        """Catch-up prefill for a request admitted into slot ``row`` of a
-        live session: free the row, then feed ``seq[row, :seq_len[row]-1]``
-        with row-only validity (occupied rows run as masked no-ops).
-
-        Precondition: the row is already free (RouterSession.retire wiped
-        it, or it was empty at open_states — prefill leaves unoccupied rows
-        fully masked with zeroed carries), so no re-retire is needed here.
-
-        Returns the admitted row's (1, V) next-token distribution for
-        similarity probing, or None when there is nothing to feed (1-token
-        prompt, or the capacity guard rebuilt the whole state — which
-        prefills the new row too)."""
-        B = seq.shape[0]
-        sid = StateManager.key(m, session_id)
-        n = int(seq_len[row]) - 1      # cache invariant: hold seq[:len-1]
-        if n <= 0:
-            return None
-        w_max = 1                      # reserve for the BUCKETED width: the
-        while w_max < n:               # append is w wide, and an under-
-            w_max *= 2                 # reservation would let the slice
-        rows_mask = np.zeros(seq.shape[0], bool)   # paged: only the admitted
-        rows_mask[row] = True                      # row consumes capacity
-        self._ensure_capacity(m, session_id, w_max + 2, seq,  # clamp onto
-                              seq_len, max_len, rows=rows_mask)  # live rows
-        done = int(self.states.lengths(sid)[row])   # re-prefill may have run
-        if done >= n:
-            return None
-        w = 1
-        while w < n - done:            # pow-2 width buckets bound jit shapes
-            w *= 2                     # (w <= w_max since n-done <= n)
-        tokens = np.zeros((B, w), np.int32)
-        valid = np.zeros((B, w), bool)
-        tokens[row, :n - done] = seq[row, done:n]
-        valid[row, :n - done] = True
-        probs = self.executor.insert(InsertRequest(
-            model=m, request_id=session_id, tokens=tokens, valid=valid))
-        self.profiler.count(f"admit.{m}")
-        return probs[row:row + 1]
+                    max_len: int,
+                    state_rows: Optional[np.ndarray] = None
+                    ) -> Optional[np.ndarray]:
+        """Single-row ``_insert_rows`` (admission): returns the admitted
+        row's (1, V) distribution for the similarity probe, or None."""
+        rows = np.zeros(seq.shape[0], bool)
+        rows[row] = True
+        probs = self._insert_rows(m, session_id, rows, seq, seq_len,
+                                  max_len, state_rows=state_rows)
+        return None if probs is None else probs[row:row + 1]
 
     def _sync_chain(self, chain: Tuple[str, ...], request_id: str,
                     needed: int, seq: np.ndarray, seq_len: np.ndarray,
-                    active: np.ndarray, max_len: int) -> Dict:
+                    active: np.ndarray, max_len: int,
+                    members: Optional[Dict[str, np.ndarray]] = None
+                    ) -> Dict:
         """Catch every chain member up to the committed stream before a
         cycle: capacity guard, gap prefix per model, and a full catch-up
-        re-prefill for models that fell beyond the gap bound.  Returns
+        re-prefill for models that fell beyond the gap bound.  ``members``
+        (model -> (B,) bool, lazy membership) scopes any rebuild to the
+        rows the model actually holds.  Returns
         {model: (prefix_tokens, prefix_valid)}."""
         prefixes = {}
         for m in chain:
+            srows = members.get(m) if members is not None else None
             self._ensure_capacity(m, request_id, needed, seq, seq_len,
-                                  max_len, rows=active)
+                                  max_len, rows=active, state_rows=srows)
             pfx, pval, _gap = self._gap_prefix(m, request_id, seq, seq_len,
                                                active)
             if pfx is None:   # fell too far behind -> catch-up prefill
                 self.states.release(StateManager.key(m, request_id))
-                self._prefill_model(m, request_id, seq, seq_len, max_len)
+                self._prefill_model(m, request_id, seq, seq_len, max_len,
+                                    rows=srows)
                 pfx, pval, _gap = self._gap_prefix(m, request_id, seq,
                                                    seq_len, active)
             prefixes[m] = (pfx, pval)
@@ -334,6 +402,39 @@ class ChainRouter:
                     seq_len[b] = start + hits[0] + 1
                     active[b] = False
 
+    @staticmethod
+    def _commit_rows(seq: np.ndarray, seq_len: np.ndarray,
+                     active: np.ndarray, cand: np.ndarray,
+                     k: np.ndarray, next_token: np.ndarray) -> None:
+        """Vectorized commit (hot decode path): for each active row b,
+        ``seq[b, len:len+k[b]] = cand[b, :k[b]]``, then the
+        correction/bonus token, then ``seq_len += k+1``.  Fancy-indexed
+        scatter replaces the per-row Python loop; outputs are bit-equal
+        (the equivalence suite pins this end to end)."""
+        rows = np.where(active)[0]
+        if rows.size == 0:
+            return
+        kr = np.asarray(k, np.int64)[rows]
+        base = np.asarray(seq_len[rows], np.int64)
+        if cand.shape[1]:
+            keep = np.arange(cand.shape[1])[None, :] < kr[:, None]
+            rr, cc = np.nonzero(keep)
+            seq[rows[rr], base[rr] + cc] = cand[rows[rr], cc]
+        seq[rows, base + kr] = np.asarray(next_token)[rows]
+        seq_len[rows] += kr + 1
+
+    def _observe_slots(self, slot_keys: Optional[Sequence[str]],
+                       producer: str, verifier: str, dtv: np.ndarray,
+                       active: np.ndarray) -> None:
+        """Per-slot acceptance feedback: each active row's verify DTV
+        updates that slot's similarity view (the per-slot scheduler's
+        evidence), alongside the pool-global EMA."""
+        if slot_keys is None or not self.adaptive:
+            return
+        for b in np.where(active)[0]:
+            self.scheduler.observe_slot(slot_keys[b], producer, verifier,
+                                        float(dtv[b]))
+
     # ------------------------------------------------------------------
     def start_session(self, num_slots: int, max_len: int,
                       session_id: str = "sess0") -> "RouterSession":
@@ -366,7 +467,7 @@ class ChainRouter:
         sess.occupied[:] = True
         sess.active[:] = True
         t0 = _time.perf_counter()
-        sess.open_states()
+        sess.boot()
         prefill_wall = _time.perf_counter() - t0
 
         acc_lens, cycle_wall, commits_hist = [], [], []
@@ -381,7 +482,7 @@ class ChainRouter:
         seq, seq_len, prompt_len = sess.seq, sess.seq_len, sess.prompt_len
         seqs = [seq[b, :seq_len[b]].copy() for b in range(B)]
         gens = [seq[b, prompt_len[b]:seq_len[b]].copy() for b in range(B)]
-        hist = sess.chain_history
+        hist = list(sess.chain_history)
         steps = sess.steps
         sess.close()
         return GenerationResult(seqs, gens, steps,
@@ -395,14 +496,20 @@ class ChainRouter:
     def _one_cycle(self, chain: Tuple[str, ...], W: int, request_id: str,
                    seq: np.ndarray, seq_len: np.ndarray,
                    active: np.ndarray,
-                   tree: Optional[TokenTree] = None) -> np.ndarray:
+                   tree: Optional[TokenTree] = None,
+                   members: Optional[Dict[str, np.ndarray]] = None,
+                   slot_keys: Optional[Sequence[str]] = None) -> np.ndarray:
         """Execute one speculative cycle; mutates seq/seq_len in place.
         Returns per-row committed token count.  A non-None ``tree`` routes
         the cycle through tree-structured speculation (draft a token tree,
-        prune per level, one merged target verify)."""
+        prune per level, one merged target verify).  ``members`` carries
+        the session's lazy chain membership (rebuild scoping);
+        ``slot_keys`` routes per-row verify DTV into the per-slot
+        scheduler views."""
         if tree is not None and len(chain) > 1:
             return self._one_tree_cycle(chain, tree, request_id, seq,
-                                        seq_len, active)
+                                        seq_len, active, members=members,
+                                        slot_keys=slot_keys)
         B = seq.shape[0]
         max_len = self.states.get(
             StateManager.key(self.target, request_id)).capacity
@@ -410,7 +517,8 @@ class ChainRouter:
         # --- ensure chain members are synced (or re-prefill laggards) ----
         prefixes = self._sync_chain(chain, request_id,
                                     self.gcap + 2 + W + len(chain),
-                                    seq, seq_len, active, max_len)
+                                    seq, seq_len, active, max_len,
+                                    members=members)
 
         # --- target-only chain: plain autoregressive step -----------------
         if len(chain) == 1:
@@ -422,10 +530,9 @@ class ChainRouter:
                 temperature=self.temperature, rng=self._next_rng()))
             nxt = toks[:, 0]
             n_committed = np.where(active, 1, 0)
-            for b in range(B):
-                if active[b]:
-                    seq[b, seq_len[b]] = nxt[b]
-                    seq_len[b] += 1
+            self._commit_rows(seq, seq_len, active,
+                              np.zeros((B, 0), np.int32),
+                              np.zeros(B, np.int64), nxt)
             return n_committed
 
         # --- draft --------------------------------------------------------
@@ -450,10 +557,13 @@ class ChainRouter:
                 greedy=self.greedy, temperature=self.temperature,
                 rng=self._next_rng()))
             ks.append(np.asarray(res.num_accepted))
-            # similarity feedback (Eq. 5/6) between adjacent chain levels
+            # similarity feedback (Eq. 5/6) between adjacent chain levels:
+            # pool-global EMA + per-slot views (slot-level routing)
             if active.any():
                 self.sims.update(producer, m,
                                  float(np.mean(res.dtv[active])))
+                self._observe_slots(slot_keys, producer, m,
+                                    np.asarray(res.dtv), active)
             self.profiler.count(f"accept.{producer}->{m}",
                                 float(np.sum(res.num_accepted[active])))
             if m != chain[-1]:
@@ -486,13 +596,7 @@ class ChainRouter:
 
         # --- commit ---------------------------------------------------------
         n_committed = np.where(active, k_N + 1, 0)
-        for b in range(B):
-            if not active[b]:
-                continue
-            kb = int(k_N[b])
-            seq[b, seq_len[b]:seq_len[b] + kb] = cand[b, :kb]
-            seq[b, seq_len[b] + kb] = next_token[b]
-            seq_len[b] += kb + 1
+        self._commit_rows(seq, seq_len, active, cand, k_N, next_token)
         self.profiler.count("cycles")
         self.profiler.count("committed", float(n_committed.sum()))
         return n_committed
@@ -501,7 +605,10 @@ class ChainRouter:
     def _one_tree_cycle(self, chain: Tuple[str, ...], tree: TokenTree,
                         request_id: str, seq: np.ndarray,
                         seq_len: np.ndarray,
-                        active: np.ndarray) -> np.ndarray:
+                        active: np.ndarray,
+                        members: Optional[Dict[str, np.ndarray]] = None,
+                        slot_keys: Optional[Sequence[str]] = None
+                        ) -> np.ndarray:
         """One tree-structured speculative cycle (SpecInfer-style):
 
           1. the draft model emits a token tree (static shape, level by
@@ -528,7 +635,8 @@ class ChainRouter:
             assert self.pool.cfg(m).supports_tree, \
                 f"{m} cannot decode token trees"
         prefixes = self._sync_chain(chain, request_id, self.gcap + 2 + N,
-                                    seq, seq_len, active, max_len)
+                                    seq, seq_len, active, max_len,
+                                    members=members)
 
         # --- draft the tree ------------------------------------------------
         m1 = chain[0]
@@ -560,6 +668,8 @@ class ChainRouter:
                 # draft-vs-this-verifier divergence — attribute it to that
                 # pair, not to the adjacent chain edge
                 self.sims.update(m1, m, float(np.mean(res.dtv[active])))
+                self._observe_slots(slot_keys, m1, m,
+                                    np.asarray(res.dtv), active)
             self.profiler.count(f"accept.{producer}->{m}",
                                 float(np.sum(res.num_accepted[active])))
             if not final:   # prune: mask the sub-trees this level rejected
@@ -591,13 +701,8 @@ class ChainRouter:
         # --- commit the winning path + correction/bonus --------------------
         path_tokens = np.take_along_axis(cand, path, axis=1)   # (B, D)
         n_committed = np.where(active, k_N + 1, 0)
-        for b in range(B):
-            if not active[b]:
-                continue
-            kb = int(k_N[b])
-            seq[b, seq_len[b]:seq_len[b] + kb] = path_tokens[b, :kb]
-            seq[b, seq_len[b] + kb] = next_token[b]
-            seq_len[b] += kb + 1
+        self._commit_rows(seq, seq_len, active, path_tokens, k_N,
+                          next_token)
         self.profiler.count("cycles")
         self.profiler.count("committed", float(n_committed.sum()))
         return n_committed
@@ -607,18 +712,27 @@ class RouterSession:
     """Slot-level continuous-batching handle (§4 asynchronous batching).
 
     A session owns a fixed pool of ``num_slots`` slots backed by one
-    batch-sized ModelState per pool model (state key
+    batch-sized ModelState per CHAIN-MEMBER model (state key
     ``model/session_id``).  Request lifecycle per slot:
 
         QUEUED --admit()--> PREFILL --> DECODING --retire()--> DONE
-                 (catch-up prefill      (run_cycle() advances
-                  fills the new row;     every active slot)
-                  live rows are
-                  masked no-ops)
+                 (chain assigned;       (run_cycle() groups
+                  catch-up prefill       active slots by chain
+                  of the CHAIN's         and advances each
+                  models only; live      group in one masked
+                  rows are masked        sub-cycle)
+                  no-ops)
 
-    Admission happens between speculation cycles; retirement frees a row
-    without stalling the others (the freed row simply goes inactive in the
-    batched kernels until re-filled).
+    Chain membership is per-slot and LAZY: ``admit`` assigns the slot a
+    chain (``get_optimal_chain(slot)`` seeded by the global prior, or an
+    explicit ``chain=`` override) and materializes its row only in that
+    chain's models — O(chain) prefill work, not O(pool).  Rescheduling may
+    reassign the chain later: leaving models free the slot's row
+    immediately, joining models catch up through ``_insert_row`` (priced
+    by the scheduler's switch penalty).  ``retire`` frees exactly the
+    member rows.  With ``router.slot_routing=False`` the legacy behaviour
+    is preserved: one global chain per cycle and every pool model
+    materialized at admission (the O(pool) A/B baseline).
     """
 
     def __init__(self, router: ChainRouter, num_slots: int, max_len: int,
@@ -636,23 +750,159 @@ class RouterSession:
         self.active = np.zeros(B, bool)     # still generating
         self.steps = 0
         self.committed = 0
-        self.chain_history: List[Tuple[Tuple[str, ...], int]] = []
-        self._opened = False                # per-model states exist
-        self._choice: Optional[ChainChoice] = None
+        # diagnostics ring: one (chain, window) entry per sub-cycle group
+        # — bounded, or an indefinite serving session leaks it at
+        # O(groups · cycles) (same accumulator class as the profiler
+        # trace, which is capped for the same reason)
+        self.chain_history: collections.deque = \
+            collections.deque(maxlen=4096)
+        # lazy chain membership: model -> (B,) bool, True where the
+        # slot's row is materialized in that model's session state
+        self._members: Dict[str, np.ndarray] = {}
+        self._slot_choice: List[Optional[ChainChoice]] = [None] * B
+        self._forced: np.ndarray = np.zeros(B, bool)  # admit(chain=...)
+        self._global_choice: Optional[ChainChoice] = None  # legacy engine
+
+    # ---- scheduling helpers -------------------------------------------
+    def _skey(self, slot: int) -> str:
+        """Per-slot scheduler key, namespaced so concurrent sessions on
+        one router cannot collide on physical slot indices."""
+        return f"{self.session_id}:{slot}"
+
+    def _fixed_choice(self) -> ChainChoice:
+        r = self.router
+        w = (r.fixed_tree.depth_levels if r.fixed_tree is not None
+             else (r.fixed_window or 4))
+        return ChainChoice(r.fixed_chain, w, 0.0, tree=r.fixed_tree)
+
+    def _choose(self, slot: int) -> ChainChoice:
+        r = self.router
+        if r.fixed_chain is not None:
+            return self._fixed_choice()
+        if not r.slot_routing:
+            return r.scheduler.get_optimal_chain()
+        return r.scheduler.get_optimal_chain(slot=self._skey(slot))
+
+    def _admit_models(self, chain: Tuple[str, ...]) -> Tuple[str, ...]:
+        """Which models an admission materializes: the slot's chain
+        (lazy membership) or the whole pool (legacy baseline)."""
+        if self.router.slot_routing:
+            return chain
+        return tuple(self.router.pool.names())
+
+    # ---- membership surgery -------------------------------------------
+    def _materialize_row(self, m: str, slot: int) -> Optional[np.ndarray]:
+        """Ensure model ``m`` holds slot ``slot``'s committed stream:
+        create the session state (row-scoped prefill) if this is the
+        model's first member, else catch the row up via ``_insert_row``.
+        Returns the row's (1, V) next-token distribution when a forward
+        ran (the admission similarity probe), else None."""
+        r = self.router
+        B = self.num_slots
+        mem = self._members.setdefault(m, np.zeros(B, bool))
+        if mem[slot]:
+            return None
+        sid = StateManager.key(m, self.session_id)
+        if not r.states.exists(sid):
+            rows = np.zeros(B, bool)
+            rows[slot] = True
+            probs = r._prefill_model(m, self.session_id, self.seq,
+                                     self.seq_len, self.max_len, rows=rows)
+            mem[slot] = True
+            r.profiler.count(f"admit.{m}")
+            return probs[slot:slot + 1]
+        p = r._insert_row(m, self.session_id, slot, self.seq,
+                          self.seq_len, self.max_len, state_rows=mem)
+        mem[slot] = True
+        return p
+
+    def _release_member(self, m: str, slot: int) -> None:
+        """Free one slot's row in one model (chain reassignment dropped
+        the model, or the slot retired).  When the model's last member
+        leaves, the whole session state is released — a pool model no
+        slot routes through holds nothing at all."""
+        mem = self._members.get(m)
+        if mem is None or not mem[slot]:
+            return
+        rows = np.zeros(self.num_slots, bool)
+        rows[slot] = True
+        self.router.executor.retire(m, self.session_id, rows)
+        mem[slot] = False
+        if not mem.any():
+            self.router.states.release(
+                StateManager.key(m, self.session_id))
+            self._members.pop(m, None)
+
+    def _ensure_members(self, chain: Tuple[str, ...],
+                        rows: np.ndarray) -> None:
+        """Lazy join: materialize any (model, row) of the group that is
+        not yet a member (a model that entered the slot's chain after
+        admission catches up through the insert path).  All of a model's
+        joining rows share ONE batched prefill/insert forward."""
+        r = self.router
+        for m in chain:
+            mem = self._members.setdefault(
+                m, np.zeros(self.num_slots, bool))
+            missing = rows & ~mem
+            if not missing.any():
+                continue
+            sid = StateManager.key(m, self.session_id)
+            if not r.states.exists(sid):
+                r._prefill_model(m, self.session_id, self.seq,
+                                 self.seq_len, self.max_len, rows=missing)
+                r.profiler.count(f"admit.{m}", float(missing.sum()))
+            else:
+                self.router._insert_rows(m, self.session_id, missing,
+                                         self.seq, self.seq_len,
+                                         self.max_len, state_rows=mem)
+            mem |= missing
 
     # ---- lifecycle ----------------------------------------------------
     def free_slots(self) -> List[int]:
         return [s for s in range(self.num_slots) if not self.occupied[s]]
 
     def admit(self, slot: int, prompt: np.ndarray,
-              max_new_tokens: int) -> float:
-        """Admit a request into a free slot (QUEUED -> PREFILL): write its
-        prompt into the slot row and catch-up-prefill every pool model.
-        Returns the measured admission wall time in seconds."""
+              max_new_tokens: int,
+              chain: Optional[Sequence[str]] = None,
+              window: Optional[int] = None,
+              tree=None) -> float:
+        """Admit a request into a free slot (QUEUED -> PREFILL): assign
+        the slot a chain, write its prompt into the slot row, and
+        catch-up-prefill the CHAIN members only (the whole pool when
+        ``router.slot_routing=False``).  An explicit ``chain``/``window``/
+        ``tree`` pins the slot's routing (bypassing the scheduler).
+        Returns the measured admission wall time in seconds.
+
+        Raises ValueError — before any slot state is touched — when the
+        prompt plus generation budget cannot fit the slot row."""
         assert not self.occupied[slot], f"slot {slot} is occupied"
         prompt = np.asarray(prompt)
         Lp = int(len(prompt))
         assert Lp >= 1, "empty prompt"
+        r = self.router
+        # validate capacity BEFORE mutating occupied/active/seq: a
+        # mid-admission failure must not leave the session inconsistent
+        need = Lp + int(max_new_tokens) + r.max_block + 2
+        if need > self.max_len:
+            raise ValueError(
+                f"request needs {need} slots (prompt {Lp} + budget "
+                f"{int(max_new_tokens)} + speculation margin) but the "
+                f"session rows hold {self.max_len}; admit rejected")
+        if chain is not None:
+            chain = tuple(chain)
+            assert chain[-1] == r.target, \
+                f"explicit chain must end with the target {r.target!r}"
+            assert len(set(chain)) == len(chain), \
+                "chains cannot repeat a model"
+            unknown = [m for m in chain if m not in r.pool.names()]
+            if unknown:   # must reject BEFORE mutating slot state — a
+                raise ValueError(   # KeyError mid-admission leaks the slot
+                    f"chain names models not in the pool: {unknown}")
+            choice = ChainChoice(
+                chain, (window or (r.fixed_window or 4)), 0.0,
+                tree=TokenTree.parse(tree) if tree is not None else None)
+        else:
+            choice = None
         t0 = _time.perf_counter()
         self.seq[slot, :] = 0
         self.seq[slot, :Lp] = prompt
@@ -661,60 +911,134 @@ class RouterSession:
         self.budget[slot] = int(max_new_tokens)
         self.occupied[slot] = True
         self.active[slot] = True
-        r = self.router
-        if not self._opened:
-            self.open_states(probe_row=slot)
-        else:
-            probe: Dict[str, np.ndarray] = {}
-            for m in r.pool.names():
-                p = r._insert_row(m, self.session_id, slot, self.seq,
-                                  self.seq_len, self.max_len)
-                if p is not None:
-                    probe[m] = p
-            if len(probe) >= 2:   # admission doubles as a similarity probe
-                r.sims.update_many(pairwise_dtv(probe))
+        if choice is None:
+            choice = self._choose(slot)
+        self._slot_choice[slot] = choice
+        self._forced[slot] = chain is not None
+        probe: Dict[str, np.ndarray] = {}
+        for m in self._admit_models(choice.chain):
+            p = self._materialize_row(m, slot)
+            if p is not None:
+                probe[m] = p
+        if len(probe) >= 2:   # admission doubles as a similarity probe
+            dtvs = pairwise_dtv(probe)
+            r.sims.update_many(dtvs)
+            if r.slot_routing and r.adaptive:
+                for (a, b), v in dtvs.items():
+                    r.scheduler.observe_slot(self._skey(slot), a, b, v)
         return _time.perf_counter() - t0
 
-    def open_states(self, probe_row: Optional[int] = None) -> None:
-        """Create every pool model's batch state from the current
-        seq/seq_len snapshot (first admission / bulk generate boot) and
-        seed the pairwise similarity table (§4.1)."""
+    def boot(self) -> None:
+        """Bulk admission (``ChainRouter.generate``): assign every
+        occupied slot its chain, then materialize each model once with a
+        BATCHED row-scoped prefill over the union of rows routed through
+        it, seeding global + per-slot similarity from the probe."""
         r = self.router
-        probe: Dict[str, np.ndarray] = {}
-        for m in r.pool.names():
-            probe[m] = r._prefill_model(m, self.session_id, self.seq,
-                                        self.seq_len, self.max_len)
-        if probe_row is not None:
-            probe = {m: p[probe_row:probe_row + 1]
-                     for m, p in probe.items()}
-        r.sims.update_many(pairwise_dtv(probe))
-        self._opened = True
+        B = self.num_slots
+        occ = np.where(self.occupied)[0]
+        for s in occ:
+            if self._slot_choice[s] is None:
+                self._slot_choice[s] = self._choose(int(s))
+        want: Dict[str, np.ndarray] = {}
+        for s in occ:
+            for m in self._admit_models(self._slot_choice[s].chain):
+                want.setdefault(m, np.zeros(B, bool))[s] = True
+        probes: Dict[str, np.ndarray] = {}
+        for m, rows in want.items():
+            probes[m] = r._prefill_model(m, self.session_id, self.seq,
+                                         self.seq_len, self.max_len,
+                                         rows=rows)
+            mem = self._members.setdefault(m, np.zeros(B, bool))
+            mem |= rows
+            r.profiler.count(f"admit.{m}", float(rows.sum()))
+        for (a, b), v in pairwise_dtv_rows(probes).items():
+            rows = want[a] & want[b]
+            if not rows.any():
+                continue
+            r.sims.update(a, b, float(np.mean(v[rows])))
+            if r.slot_routing and r.adaptive:
+                for s in np.where(rows)[0]:
+                    r.scheduler.observe_slot(self._skey(int(s)), a, b,
+                                             float(v[s]))
+
+    def _reschedule(self) -> None:
+        """Refresh per-slot choices; on a chain change, free the leaving
+        models' rows (joiners materialize lazily at the next sub-cycle)."""
+        r = self.router
+        if r.fixed_chain is not None:
+            for s in np.where(self.active)[0]:
+                if self._slot_choice[s] is None:
+                    self._slot_choice[s] = self._fixed_choice()
+            return
+        resched = r.adaptive and self.steps % r.reschedule_every == 0
+        if not r.slot_routing:
+            # legacy-engine fidelity: ONE shared global chain per cycle
+            # for every (non-pinned) slot, refreshed on the reschedule
+            # cadence — slots admitted mid-interval must not capture a
+            # drifted global choice and split the cycle into groups.
+            # Membership stays materialized across switches, exactly like
+            # the old engine (laggards catch up through the gap path).
+            if self._global_choice is None or resched:
+                self._global_choice = r.scheduler.get_optimal_chain()
+            for s in np.where(self.active)[0]:
+                if not self._forced[s]:
+                    self._slot_choice[s] = self._global_choice
+            return
+        for s in np.where(self.active)[0]:
+            cur = self._slot_choice[s]
+            if cur is not None and (self._forced[s] or not resched):
+                continue
+            new = self._choose(int(s))
+            if cur is not None and new.chain != cur.chain:
+                for m in set(cur.chain) - set(new.chain):
+                    self._release_member(m, int(s))
+            self._slot_choice[s] = new
 
     def run_cycle(self) -> CycleReport:
         """One speculative cycle over every active slot (DECODING step).
-        Chain/window selection follows the router's adaptive schedule;
-        per-slot budget/EOS termination is applied after the cycle."""
+        Active slots are grouped by their assigned (chain, window, tree)
+        and each group runs one masked sub-cycle — batched kernels keep
+        their static shapes, rows outside the group ride along as no-ops,
+        and per-slot greedy output is bit-exact to target-only decoding
+        regardless of the grouping.  Per-slot budget/EOS termination is
+        applied after the cycle."""
         r = self.router
         B = self.num_slots
         if not self.active.any():
             return CycleReport(np.zeros(B, np.int64), 0.0, (), 0, 0.0)
-        if self._choice is None or (r.adaptive
-                                    and self.steps % r.reschedule_every == 0):
-            if r.fixed_chain is not None:
-                w = (r.fixed_tree.depth_levels if r.fixed_tree is not None
-                     else (r.fixed_window or 4))
-                self._choice = ChainChoice(r.fixed_chain, w, 0.0,
-                                           tree=r.fixed_tree)
-            else:
-                self._choice = r.scheduler.get_optimal_chain()
-        chain, W = self._choice.chain, self._choice.window
-        self.chain_history.append((chain, W))
+        self._reschedule()
+        # group slots by assigned (chain, window, tree shape)
+        groups: Dict[tuple, np.ndarray] = {}
+        order: List[tuple] = []
+        for s in np.where(self.active)[0]:
+            c = self._slot_choice[s]
+            key = (c.chain, c.window,
+                   c.tree.branching if c.tree is not None else None)
+            if key not in groups:
+                groups[key] = np.zeros(B, bool)
+                order.append(key)
+            groups[key][s] = True
+        slot_keys = ([self._skey(s) for s in range(B)]
+                     if r.slot_routing else None)
         pre_active = self.active.copy()
         gen_before = (self.seq_len - self.prompt_len).copy()
+        n_acc = np.zeros(B, np.int64)
+        ginfo: List[Tuple[Tuple[str, ...], int, int]] = []
         t0 = _time.perf_counter()
-        n_acc = r._one_cycle(chain, W, self.session_id, self.seq,
-                             self.seq_len, self.active,
-                             tree=self._choice.tree)
+        for key in order:
+            gmask = groups[key] & self.active
+            if not gmask.any():
+                continue
+            first = int(np.where(gmask)[0][0])
+            choice = self._slot_choice[first]
+            self._ensure_members(choice.chain, gmask)
+            acc = r._one_cycle(choice.chain, choice.window,
+                               self.session_id, self.seq, self.seq_len,
+                               gmask, tree=choice.tree,
+                               members=self._members, slot_keys=slot_keys)
+            n_acc += np.asarray(acc, np.int64)   # groups are row-disjoint
+            self.chain_history.append((choice.chain, choice.window))
+            ginfo.append((choice.chain, choice.window, int(gmask.sum())))
         wall = _time.perf_counter() - t0
         acc_mean = float(np.mean(n_acc[pre_active]))
         self.steps += 1
@@ -733,7 +1057,9 @@ class RouterSession:
                             (self.seq_len - self.prompt_len) - gen_before,
                             0).astype(np.int64)
         self.committed += int(survived.sum())
-        return CycleReport(n_acc, wall, chain, W, acc_mean)
+        lead = ginfo[0] if ginfo else ((), 0, 0)
+        return CycleReport(n_acc, wall, lead[0], lead[1], acc_mean,
+                           groups=ginfo)
 
     def generated(self, slot: int) -> np.ndarray:
         """The slot's committed output tokens so far (prompt excluded)."""
@@ -742,21 +1068,27 @@ class RouterSession:
 
     def retire(self, slot: int) -> np.ndarray:
         """Free a finished slot (DECODING -> DONE) and return its output.
-        The row is released in every model state (recurrent carries wiped)
-        so a later admit() can reuse it; live slots are untouched."""
+        Only the slot's CHAIN-MEMBER rows are released (recurrent carries
+        wiped); pool models outside its chain never held anything.  Live
+        slots are untouched."""
         out = self.generated(slot)
-        rows = np.zeros(self.num_slots, bool)
-        rows[slot] = True
-        if self._opened:
-            for m in self.router.pool.names():
-                self.router.executor.retire(m, self.session_id, rows)
+        for m in list(self._members):
+            self._release_member(m, slot)
         self.occupied[slot] = False
         self.active[slot] = False
         self.seq_len[slot] = 0
         self.prompt_len[slot] = 0
+        self._slot_choice[slot] = None
+        self._forced[slot] = False
+        self.router.scheduler.release_slot(self._skey(slot))
         return out
 
     def close(self) -> None:
-        """Release every model state owned by this session."""
+        """Release every model state owned by this session, plus the
+        scheduler's per-slot views."""
         self.router.states.release_request(self.session_id)
-        self._opened = False
+        for s in range(self.num_slots):
+            self.router.scheduler.release_slot(self._skey(s))
+        self._members.clear()
+        self._slot_choice = [None] * self.num_slots
+        self._forced[:] = False

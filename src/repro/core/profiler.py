@@ -52,12 +52,17 @@ class PerformanceProfiler:
       ("prefill", m)        — prefill time (chain-switch catch-up cost)
     """
 
-    def __init__(self, alpha: float = 0.3, keep_trace: bool = True):
+    def __init__(self, alpha: float = 0.3, keep_trace: bool = True,
+                 trace_cap: Optional[int] = 4096):
         self.alpha = alpha
         self.emas: Dict[tuple, EMA] = collections.defaultdict(
             lambda: EMA(self.alpha))
         self.counters: Dict[str, float] = collections.defaultdict(float)
-        self.trace: list = []
+        # bounded ring buffer: a long-running serving session records an
+        # OpRecord per op forever, so an unbounded list is a memory leak —
+        # keep the most recent ``trace_cap`` records (None = unbounded,
+        # for short offline analyses that want the full trace)
+        self.trace: collections.deque = collections.deque(maxlen=trace_cap)
         self.keep_trace = keep_trace
 
     @contextlib.contextmanager

@@ -12,7 +12,8 @@ import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .profiler import PerformanceProfiler
-from .similarity import SimilarityStore, acceptance_from_sim
+from .similarity import (SimilarityStore, SlotSimilarity,
+                         acceptance_from_sim)
 from .token_tree import TokenTree
 
 
@@ -74,7 +75,9 @@ class ModelChainScheduler:
                  verify_overhead: float = 0.1,
                  switch_penalty_steps: float = 32.0,
                  default_decode_s: float = 0.05,
-                 reuse_rtol: float = 0.02):
+                 reuse_rtol: float = 0.02,
+                 explore_sim: float = 0.8,
+                 capability_exponent: float = 0.5):
         assert target in model_names
         self.models = list(model_names)
         self.target = target
@@ -96,10 +99,25 @@ class ModelChainScheduler:
         # those inputs and reuses the previous argmin until some input has
         # drifted by more than ``reuse_rtol`` (relative).  0 disables reuse.
         self.reuse_rtol = reuse_rtol
+        # exploration default: lazy chain membership means unscheduled
+        # model pairs are never probed, so a pessimistic unobserved
+        # default would lock the pool into target-only forever.  Treat
+        # never-observed pairs as optimistically similar — one real cycle
+        # (or the admission probe) replaces the optimism with evidence.
+        self.explore_sim = explore_sim
+        # cold-start decode-time prior: T_m ∝ capability^exponent.  The
+        # default 0.5 is conservative for same-architecture pools; pools
+        # whose wall time scales ~linearly with parameters can set 1.0.
+        self.capability_exponent = capability_exponent
         self.eval_count = 0           # full sweeps actually executed
         self.reuse_count = 0          # calls served from the memo
         self._last_inputs: Optional[Dict] = None
         self._last_choice: Optional[ChainChoice] = None
+        # per-slot routing state: slot-scoped similarity EMAs over the
+        # global prior, plus one (choice, inputs-snapshot) memo per slot
+        self.slot_sims = SlotSimilarity(sims)
+        self._slot_choice: Dict[str, ChainChoice] = {}
+        self._slot_inputs: Dict[str, Dict] = {}
 
     # ---- Step 1: candidate chains (Alg. 1 lines 2-3) -------------------
     def candidate_chains(self) -> List[Tuple[str, ...]]:
@@ -113,19 +131,40 @@ class ModelChainScheduler:
                 chains.append(tuple(combo) + (self.target,))
         return chains
 
+    # ---- acceptance inputs ----------------------------------------------
+    def pair_alpha(self, slot: Optional[str], a: str, b: str) -> float:
+        """α for adjacent chain models (a drafts for b): the slot's own
+        DTV EMA when observed, else the pool-wide prior, else the
+        exploration default (never-observed pairs must stay schedulable
+        under lazy membership — nothing else will ever measure them)."""
+        s = self.slot_sims.sim_score(slot, a, b)
+        return acceptance_from_sim(s if s is not None else self.explore_sim)
+
+    def observe_slot(self, slot: str, a: str, b: str, dtv: float):
+        """Per-slot similarity feedback: the admission probe over the
+        slot's chain members and the slot's row of every verify pass."""
+        self.slot_sims.update(slot, a, b, dtv)
+
+    def release_slot(self, slot: str):
+        """Drop a retired slot's view (EMAs + memo) — the next occupant
+        of the physical slot must start from the shared prior."""
+        self.slot_sims.release(slot)
+        self._slot_choice.pop(slot, None)
+        self._slot_inputs.pop(slot, None)
+
     # ---- Eq. 7 predictor ------------------------------------------------
     def predict_t_eff(self, chain: Sequence[str], window: int,
                       alphas: Optional[Sequence[float]] = None,
-                      tree: Optional[TokenTree] = None) -> float:
+                      tree: Optional[TokenTree] = None,
+                      slot: Optional[str] = None) -> float:
         prof = self.profiler
         T = {m: prof.decode_time(m, self._default_time(m))
              for m in chain}
         if len(chain) == 1:
             return T[chain[0]]
         if alphas is None:
-            alphas = [
-                acceptance_from_sim(self.sims.sim_score(chain[i], chain[i + 1]))
-                for i in range(len(chain) - 1)]
+            alphas = [self.pair_alpha(slot, chain[i], chain[i + 1])
+                      for i in range(len(chain) - 1)]
 
         if tree is not None and not tree.is_linear:
             # tree cycle: D sequential draft levels, every level verifies
@@ -163,39 +202,57 @@ class ModelChainScheduler:
     def _default_time(self, m: str) -> float:
         # cold start: scale a nominal decode time by relative capability
         base = min(self.capability.values())
-        return self.default_decode_s * (self.capability[m] / base) ** 0.5
+        return self.default_decode_s * (
+            self.capability[m] / base) ** self.capability_exponent
 
     # ---- memoization: Eq. 7 inputs snapshot -----------------------------
-    def _inputs_snapshot(self) -> Dict:
+    def _inputs_snapshot(self, slot: Optional[str] = None) -> Dict:
         """Every value ``predict_t_eff`` can read: per-(op, model[, block])
-        profiler EMAs and the pairwise similarity table."""
+        profiler EMAs, the pairwise similarity table, and (per-slot
+        scheduling) the slot's own similarity EMAs."""
         snap = {("sim",) + k: v for k, v in self.sims.table().items()}
         for k, e in self.profiler.emas.items():
             if k[0] in ("decode1", "decode_level", "verify", "prefill") \
                     and e.count:
                 snap[("ema",) + k] = e.get()
+        if slot is not None:
+            for k, v in self.slot_sims.table(slot).items():
+                snap[("slotsim",) + k] = v
         return snap
 
-    def _inputs_drifted(self, snap: Dict) -> bool:
-        if self._last_inputs is None or snap.keys() != self._last_inputs.keys():
+    def _inputs_drifted(self, snap: Dict, last: Optional[Dict]) -> bool:
+        if last is None or snap.keys() != last.keys():
             return True
         for k, v in snap.items():
-            old = self._last_inputs[k]
+            old = last[k]
             if abs(v - old) > self.reuse_rtol * max(abs(old), 1e-12):
                 return True
         return False
 
     # ---- Steps 2-3: select optimum (Alg. 1 lines 6-18) ------------------
-    def get_optimal_chain(self) -> ChainChoice:
-        snap = self._inputs_snapshot()
-        if (self.reuse_rtol > 0 and self._last_choice is not None
-                and not self._inputs_drifted(snap)):
+    def get_optimal_chain(self, slot: Optional[str] = None) -> ChainChoice:
+        """Argmin of Eq. 7 over (chain, window, tree).  With ``slot``
+        (per-slot routing) the acceptance inputs come from that slot's
+        view (its probe + verify EMAs over the global prior), the switch
+        penalty is charged against the SLOT's previous chain, and the
+        memo is slot-scoped; ``slot=None`` is the pool-global schedule."""
+        snap = self._inputs_snapshot(slot)
+        last_choice = (self._slot_choice.get(slot) if slot is not None
+                       else self._last_choice)
+        last_inputs = (self._slot_inputs.get(slot) if slot is not None
+                       else self._last_inputs)
+        if (self.reuse_rtol > 0 and last_choice is not None
+                and not self._inputs_drifted(snap, last_inputs)):
             self.reuse_count += 1
-            return self._last_choice
+            return last_choice
         self.eval_count += 1
         best = None
         table = {}
-        prev = self._last_choice.chain if self._last_choice else None
+        # switch penalty anchor: the slot's own previous chain, falling
+        # back to the global memo (a fresh slot joining the incumbent
+        # chain is free; anything else prices its catch-up prefills)
+        prev = last_choice.chain if last_choice else (
+            self._last_choice.chain if self._last_choice else None)
         for chain in self.candidate_chains():
             options = [(w, None)
                        for w in (self.windows if len(chain) > 1 else (1,))]
@@ -203,7 +260,7 @@ class ModelChainScheduler:
                     and all(self.tree_capable.get(m, False) for m in chain)):
                 options += [(tr.depth_levels, tr) for tr in self.tree_shapes]
             for w, tr in options:
-                t = self.predict_t_eff(chain, w, tree=tr)
+                t = self.predict_t_eff(chain, w, tree=tr, slot=slot)
                 if prev is not None and chain != prev:
                     # amortized catch-up prefill for newly joining models
                     joiners = set(chain) - set(prev)
@@ -215,6 +272,10 @@ class ModelChainScheduler:
                     best = ChainChoice(chain, w, t, tree=tr)
         best = ChainChoice(best.chain, best.window, best.predicted_t_eff,
                            table, tree=best.tree)
-        self._last_choice = best
-        self._last_inputs = snap
+        if slot is not None:
+            self._slot_choice[slot] = best
+            self._slot_inputs[slot] = snap
+        else:
+            self._last_choice = best
+            self._last_inputs = snap
         return best

@@ -21,14 +21,24 @@ import numpy as np
 from .profiler import EMA
 
 
-def pairwise_dtv(probs: Dict[str, np.ndarray]) -> Dict[Tuple[str, str], float]:
-    """probs: model -> (B, V) distribution on the same contexts."""
+def pairwise_dtv_rows(
+        probs: Dict[str, np.ndarray]) -> Dict[Tuple[str, str], np.ndarray]:
+    """probs: model -> (B, V) distribution on the same contexts.
+    Returns per-row DTVs (B,) per unordered pair — callers that track
+    per-slot similarity (slot-level routing) consume the rows; the scalar
+    ``pairwise_dtv`` is the batch mean."""
     out = {}
     for a, b in itertools.combinations(sorted(probs), 2):
         d = 0.5 * np.sum(np.abs(probs[a].astype(np.float64)
                                 - probs[b].astype(np.float64)), axis=-1)
-        out[(a, b)] = float(np.mean(d))
+        out[(a, b)] = d
     return out
+
+
+def pairwise_dtv(probs: Dict[str, np.ndarray]) -> Dict[Tuple[str, str], float]:
+    """probs: model -> (B, V) distribution on the same contexts."""
+    return {k: float(np.mean(v))
+            for k, v in pairwise_dtv_rows(probs).items()}
 
 
 class SimilarityStore:
@@ -65,6 +75,51 @@ class SimilarityStore:
 
     def table(self) -> Dict[Tuple[str, str], float]:
         return {k: 1.0 - e.get() for k, e in self._dtv.items()}
+
+
+class SlotSimilarity:
+    """Per-slot DTV EMAs layered over the global ``SimilarityStore``.
+
+    Slot-level routing (§4.2 applied per request): each serving slot keeps
+    its OWN acceptance evidence — the admission-time probe over its chain
+    members plus the per-row DTV of every verify pass it rides — so
+    ``get_optimal_chain(slot)`` can route an easy request through a deep
+    chain while a hard one in the next slot stays target-only.  The global
+    store is the shared prior: pairs the slot has never observed fall back
+    to the pool-wide EMA, and pairs nobody has observed return None so the
+    scheduler can apply its exploration default.
+    """
+
+    def __init__(self, prior: SimilarityStore, alpha: float = 0.3):
+        self.prior = prior
+        self.alpha = alpha
+        self._dtv: Dict[str, Dict[Tuple[str, str], EMA]] = {}
+
+    def update(self, slot: str, a: str, b: str, dtv: float):
+        k = SimilarityStore._key(a, b)
+        self._dtv.setdefault(slot, {}).setdefault(
+            k, EMA(self.alpha)).update(float(dtv))
+
+    def sim_score(self, slot: Optional[str], a: str, b: str
+                  ) -> Optional[float]:
+        """Slot's own EMA -> global prior -> None (never observed)."""
+        if a == b:
+            return 1.0
+        if slot is not None:
+            e = self._dtv.get(slot, {}).get(SimilarityStore._key(a, b))
+            if e is not None:
+                return 1.0 - e.get()
+        if self.prior.observed(a, b):
+            return self.prior.sim_score(a, b)
+        return None
+
+    def table(self, slot: str) -> Dict[Tuple[str, str], float]:
+        """The slot's OWN observations (prior excluded) — memo inputs."""
+        return {k: 1.0 - e.get()
+                for k, e in self._dtv.get(slot, {}).items()}
+
+    def release(self, slot: str):
+        self._dtv.pop(slot, None)
 
 
 def acceptance_from_sim(sim: float, calib_a: float = 1.0,

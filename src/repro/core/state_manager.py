@@ -54,6 +54,12 @@ class StateManager:
         with self._lock:
             return self._states[state_id]
 
+    def exists(self, state_id: str) -> bool:
+        """Lazy chain membership: a model outside every live slot's chain
+        never materializes a session state at all."""
+        with self._lock:
+            return state_id in self._states
+
     def update(self, state_id: str, state):
         with self._lock:
             self._states[state_id] = state
@@ -99,6 +105,20 @@ class StateManager:
     def lengths(self, state_id: str) -> np.ndarray:
         with self._lock:
             return np.asarray(self._states[state_id].length)
+
+    def row_footprint(self, state_id: str, row: int) -> int:
+        """Physical cache entries held by ONE batch row: allocated blocks
+        × block size for paged states, the row's cached length for
+        contiguous ones.  0 for a missing state — the O(chain) admission
+        invariant ('pool models outside the assigned chain hold zero
+        rows/blocks for a slot') is asserted against this."""
+        with self._lock:
+            st = self._states.get(state_id)
+        if st is None:
+            return 0
+        if isinstance(st, PagedModelState):
+            return int(np.asarray(st.num_blocks)[row]) * st.block_size
+        return int(np.asarray(st.length)[row])
 
     def capacity_used(self, state_id: str) -> int:
         """Physical occupancy: shared-pointer height for contiguous states,

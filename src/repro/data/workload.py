@@ -33,6 +33,8 @@ class Request:
     first_token_s: float = -1.0
     finish_s: float = -1.0
     generated: int = 0
+    output_tokens: np.ndarray = None   # committed stream (A/B bit-equality
+                                       # checks against target-only decode)
 
     @property
     def ttft(self):

@@ -13,6 +13,12 @@ masked no-ops) and finished rows retire without stalling the others, so a
 long request never blocks the arrivals queued behind it.  This is the
 iteration-level scheduling that SLO-aware serving systems (SpecServe,
 StreamServe) identify as the main goodput/p95-TTFT lever under load.
+Routing is per-slot with lazy chain membership (see core/chain_router.py):
+admission materializes a request only in its assigned chain's models —
+O(chain) prefill work and KV footprint, not O(pool) — and each cycle runs
+one masked sub-cycle per distinct (chain, window, tree) group.  Pass
+``router_kwargs=dict(slot_routing=False)`` for the legacy global-chain
+baseline (``benchmarks/routing_ab.py`` is the A/B).
 
 Legacy model (``continuous=False``): stop-the-world batch formation —
 requests queue until ``batch_size`` are available (or ``batch_wait_s``
@@ -36,6 +42,11 @@ import numpy as np
 
 from ..core import ChainRouter, ModelPool, PerformanceProfiler
 from ..data.workload import Request
+
+# serving keeps a bounded op trace: the profiler's EMAs/counters (what the
+# scheduler reads) are O(1), but OpRecords accumulate per op — a small ring
+# is plenty for debugging and cannot leak over a long-running engine
+_SERVING_TRACE_CAP = 512
 
 
 @dataclasses.dataclass
@@ -74,6 +85,8 @@ class ServingEngine:
         self.router_kwargs = dict(router_kwargs or {})
         if paged is not None:              # engine-level A/B convenience
             self.router_kwargs.setdefault("paged", paged)
+        self.router_kwargs.setdefault(
+            "profiler", PerformanceProfiler(trace_cap=_SERVING_TRACE_CAP))
         # one router per engine: jit caches and scheduler state persist
         # across batches (recompiling per batch would bill compilation to
         # every request's latency)
@@ -170,7 +183,8 @@ class ServingEngine:
                     r.first_token_s = clock
                 if not sess.active[s]:
                     r.finish_s = clock
-                    r.generated = len(sess.retire(s))
+                    r.output_tokens = sess.retire(s)
+                    r.generated = len(r.output_tokens)
                     slot_req[s] = None
             if cycles > cycle_cap:
                 raise RuntimeError("continuous engine exceeded cycle cap "
@@ -239,6 +253,7 @@ class ServingEngine:
             r.first_token_s = first_at[b]
             r.finish_s = done_at[b]
             r.generated = int(gen_len[b])
+            r.output_tokens = res.generated[b]
         return res.acceptance_lengths
 
     # ------------------------------------------------------------------

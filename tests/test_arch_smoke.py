@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, get_smoke_config
 from repro.models.model import LanguageModel
 
+pytestmark = pytest.mark.slow   # one forward per assigned arch, ~90 s on CPU
+
 
 @pytest.fixture(scope="module")
 def key():

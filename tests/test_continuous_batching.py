@@ -146,6 +146,7 @@ def test_continuous_matches_legacy_on_single_batch(pool):
 # ---------------------------------------------------------------------------
 # acceptance: head-of-line blocking A/B
 # ---------------------------------------------------------------------------
+@pytest.mark.slow   # three full engine runs per arm (jit warm + measure)
 def test_p95_ttft_beats_legacy_under_hol_blocking(pool):
     """One long request ahead of several short ones: the continuous engine
     must deliver strictly lower p95 TTFT than stop-the-world batch

@@ -10,6 +10,8 @@ from repro.core import ChainRouter, ModelPool
 from repro.models import ModelConfig
 from repro.models.model import LanguageModel
 
+pytestmark = pytest.mark.slow   # full bit-equality sweep, ~2 min on CPU
+
 
 @pytest.fixture(scope="module")
 def pool():

@@ -17,6 +17,8 @@ from repro.models import ModelConfig
 from repro.models import kv_cache as kvc
 from repro.models.model import LanguageModel
 
+pytestmark = pytest.mark.slow   # churn regression + kernel parity, ~80 s on CPU
+
 
 def tiny_cfg(**kw):
     d = dict(name="t", arch_type="dense", num_layers=2, d_model=32,

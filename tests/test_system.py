@@ -10,6 +10,8 @@ from repro.core import ChainRouter, ModelPool
 from repro.models import ModelConfig
 from repro.models.model import LanguageModel
 
+pytestmark = pytest.mark.slow   # end-to-end adaptive generation, ~80 s on CPU
+
 
 @pytest.fixture(scope="module")
 def system():

@@ -24,6 +24,8 @@ from repro.models import ModelConfig
 from repro.models import kv_cache as kvc
 from repro.models.model import LanguageModel
 
+pytestmark = pytest.mark.slow   # full tree-cycle sweep, ~2 min on CPU
+
 
 @pytest.fixture(scope="module")
 def pool():
