@@ -1,0 +1,158 @@
+"""Fused vs per-op cycle overhead A/B (device-resident speculative cycles).
+
+Same pool, same prompts, same seed, linear AND tree groups: the
+host-orchestrated per-op cycle (``fused=False`` — one jitted op dispatch +
+one host sync per draft/verify/rollback step, plus full probability
+tensors pulled to host every level) against the fused cycle executor
+(``fused=True`` — one jitted program and ONE host transfer per cycle
+group).  Measures
+
+  * host-sync count per cycle (the profiler's ``host_sync`` counter —
+    host-synchronizing op dispatches on the serving path), and
+  * per-cycle wall time (median over the measured run's cycles),
+
+and asserts greedy bit-equality between the arms.  The pool is built from
+SMALL models on purpose: per-cycle latency is then dominated by dispatch
+gaps and device→host transfers — exactly the orchestration overhead this
+benchmark isolates (with big models the same absolute saving hides inside
+model FLOPs; the host-sync count is the size-independent signal).
+
+With ``--assert`` the fused arm must take strictly fewer host syncs per
+cycle AND win the median per-cycle latency — the CI smoke for the
+device-resident serving path.  Emits a ``BENCH_5.json`` perf snapshot so
+later PRs have a baseline trajectory.
+
+Output CSV: cycle_overhead,<mode>,<arm>,<steps>,<syncs_per_cycle>,
+<cycle_ms_median>,<tok_per_s>,<bit_identical>.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import ChainRouter, ModelPool
+
+
+def build_bench_pool(vocab: int = 127) -> ModelPool:
+    """A 3-deep dispatch-bound pool: small dense models so per-cycle wall
+    time is orchestration, not FLOPs."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import ModelConfig
+    from repro.models.model import LanguageModel
+    pool = ModelPool()
+    for (n, L, d, s) in [("bench-68m", 2, 32, 1), ("bench-1b", 3, 48, 2),
+                         ("bench-7b", 4, 64, 3)]:
+        cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
+                          d_model=d, num_heads=4, num_kv_heads=2,
+                          d_ff=2 * d, vocab_size=vocab, dtype=jnp.float32)
+        params, axes = LanguageModel(cfg).init(jax.random.PRNGKey(s))
+        pool.register(cfg, params=params, param_axes=axes)
+    return pool
+
+
+def run_arm(pool, prompts, lens, max_new: int, chain, fused: bool,
+            window: Optional[int] = None, tree=None,
+            profile_every: int = 16) -> Dict:
+    kw = dict(adaptive=False, fixed_chain=chain, fused=fused,
+              profile_every=profile_every)
+    if tree is not None:
+        kw["fixed_tree"] = tree
+    else:
+        kw["fixed_window"] = window
+    router = ChainRouter(pool, chain[-1], greedy=True, seed=0, **kw)
+    # warmup populates the jit caches (incl. the fused cycle programs) —
+    # at the SAME max_new, so the measured run reuses every compiled
+    # shape (generate() sizes the session state from the token budget)
+    router.generate(prompts, lens, max_new, request_id="warm")
+    sync0 = router.profiler.counters["host_sync"]
+    out = router.generate(prompts, lens, max_new, request_id="run")
+    syncs = router.profiler.counters["host_sync"] - sync0
+    wall = sum(out.cycle_wall_s)
+    return dict(
+        generated=out.generated,
+        steps=out.steps,
+        committed=out.committed_tokens,
+        syncs_per_cycle=syncs / max(out.steps, 1),
+        cycle_ms_median=1e3 * float(np.median(out.cycle_wall_s)),
+        tok_s=out.committed_tokens / max(wall, 1e-9),
+    )
+
+
+def main(max_new: int = 32, batch: int = 4, window: int = 4,
+         tree: str = "2x2x1", do_assert: bool = False,
+         out_json: str = "BENCH_5.json", print_csv: bool = True) -> Dict:
+    import jax
+    pool = build_bench_pool()
+    prompts = np.array(jax.random.randint(jax.random.PRNGKey(7),
+                                          (batch, 12), 0, 127))
+    lens = np.array([12, 9, 11, 7][:batch] + [10] * max(batch - 4, 0))
+
+    modes = {
+        # 3-deep chain: the per-op path pays draft + 2 verifies +
+        # 3 rollbacks + per-model capacity/gap reads every cycle
+        "linear": dict(chain=("bench-68m", "bench-1b", "bench-7b"),
+                       window=window),
+        "tree": dict(chain=("bench-68m", "bench-7b"), tree=tree),
+    }
+    report: Dict[str, Dict] = {}
+    for mode, mkw in modes.items():
+        chain = mkw.pop("chain")
+        arms = {}
+        for arm, fused in (("unfused", False), ("fused", True)):
+            arms[arm] = run_arm(pool, prompts, lens, max_new, chain,
+                                fused, **mkw)
+        ident = all(np.array_equal(a, b)
+                    for a, b in zip(arms["fused"]["generated"],
+                                    arms["unfused"]["generated"]))
+        for arm in ("unfused", "fused"):
+            r = arms[arm]
+            if print_csv:
+                print(f"cycle_overhead,{mode},{arm},{r['steps']},"
+                      f"{r['syncs_per_cycle']:.2f},"
+                      f"{r['cycle_ms_median']:.2f},{r['tok_s']:.1f},"
+                      f"{int(ident)}")
+            r.pop("generated")
+        report[mode] = dict(**{a: arms[a] for a in arms},
+                            bit_identical=ident)
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"bench": "cycle_overhead", "max_new": max_new,
+                       "batch": batch, "window": window, "tree": tree,
+                       "modes": report}, f, indent=2)
+
+    if do_assert:
+        for mode, rep in report.items():
+            f, u = rep["fused"], rep["unfused"]
+            assert rep["bit_identical"], \
+                f"{mode}: fused output diverged from the per-op path"
+            assert f["syncs_per_cycle"] < u["syncs_per_cycle"], \
+                (f"{mode}: fused path must take strictly fewer host syncs "
+                 f"per cycle ({f['syncs_per_cycle']:.2f} vs "
+                 f"{u['syncs_per_cycle']:.2f})")
+            assert f["cycle_ms_median"] < u["cycle_ms_median"], \
+                (f"{mode}: fused path must win median per-cycle latency "
+                 f"({f['cycle_ms_median']:.2f}ms vs "
+                 f"{u['cycle_ms_median']:.2f}ms)")
+        print("cycle_overhead,assert,ok")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--assert", dest="do_assert", action="store_true",
+                    help="fail unless the fused path takes strictly fewer "
+                         "host syncs per cycle and wins median per-cycle "
+                         "latency (both modes), with bit-equal output")
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--window", type=int, default=4)
+    ap.add_argument("--tree", default="2x2x1")
+    ap.add_argument("--out-json", default="BENCH_5.json")
+    a = ap.parse_args()
+    main(max_new=a.max_new, batch=a.batch, window=a.window, tree=a.tree,
+         do_assert=a.do_assert, out_json=a.out_json)

@@ -11,6 +11,8 @@ baselines for the EAF speedup.
         [--no-paged]        # legacy contiguous shared-pointer KV (A/B)
         [--no-slot-routing] # legacy global-chain routing: one chain per
                             # cycle, whole pool prefilled at admission
+        [--no-fused]        # legacy host-orchestrated per-op cycles (A/B)
+        [--profile-every N] # unfused profiling-cycle cadence (default 16)
 """
 import argparse
 
@@ -23,7 +25,9 @@ from repro.train.pool import build_trained_pool
 
 def run(pool, corpus, args, label, router_kwargs):
     router_kwargs = dict(router_kwargs, paged=not args.no_paged,
-                         slot_routing=not args.no_slot_routing)
+                         slot_routing=not args.no_slot_routing,
+                         fused=not args.no_fused,
+                         profile_every=args.profile_every)
     reqs = make_workload(corpus, args.dataset, args.rate, args.duration,
                          seed=7)
     eng = ServingEngine(pool, "demo-7b", batch_size=args.batch,
@@ -61,6 +65,14 @@ def main():
                     help="legacy global-chain routing — one chain for "
                          "every slot per cycle and O(pool) admission "
                          "prefill — instead of per-slot lazy chains (A/B)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="legacy host-orchestrated per-op speculation "
+                         "cycles instead of the device-resident fused "
+                         "cycle program (A/B)")
+    ap.add_argument("--profile-every", type=int, default=16,
+                    help="run an unfused profiling cycle every N cycles "
+                         "to refresh the scheduler's per-op timings "
+                         "(0 = never)")
     args = ap.parse_args()
 
     pool, corpus = build_trained_pool(steps=args.steps)

@@ -40,6 +40,21 @@ remains bit-exact to target-only decoding per slot regardless of
 grouping.  ``slot_routing=False`` restores the legacy behaviour — one
 global chain per cycle, every pool model prefilled at admission — as the
 A/B baseline (``benchmarks/routing_ab.py``).
+
+Device-resident cycles (default, ``fused=True``): each sub-cycle group
+runs as ONE jitted program (``Executor.fused_cycle``) that keeps the
+session buffers (seq / seq_len / active / budgets) and every chain
+member's model state on device; only a small per-cycle ``FusedSummary``
+(commit slab, accept counts, DTV rows, cache cursors) crosses to host in
+one transfer, and the host mirror of ``seq``/``seq_len``/``active`` is
+rebuilt from it exactly (``generated``/``retire`` read the mirror).
+Because fusing hides per-op timings, every ``profile_every``-th cycle
+(default 16, cycle 0 included) runs the legacy per-op path instead,
+refreshing the scheduler's ``T_i`` EMAs; capacity pressure or an
+oversized catch-up gap also falls back to the per-op path for that cycle
+(it owns the defrag/re-prefill escapes).  ``fused=False`` keeps the
+host-orchestrated loop everywhere — the bit-exact A/B baseline
+(``benchmarks/cycle_overhead.py``).
 """
 from __future__ import annotations
 
@@ -49,12 +64,14 @@ import time as _time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import verification as ver
 from .executor import (DraftRequest, DraftTreeRequest, Executor,
-                       InsertRequest, PrefillRequest, ResolveTreeRequest,
-                       RollbackRequest, VerifyRequest, VerifyTreeRequest)
+                       FusedCycleRequest, InsertRequest, PrefillRequest,
+                       ResolveTreeRequest, RollbackRequest, VerifyRequest,
+                       VerifyTreeRequest)
 from .model_pool import ModelPool
 from .profiler import PerformanceProfiler
 from .scheduler import ChainChoice, ModelChainScheduler
@@ -108,10 +125,20 @@ class ChainRouter:
                  seed: int = 0,
                  paged: bool = True,
                  slot_routing: bool = True,
+                 fused: bool = True,
+                 profile_every: int = 16,
                  scheduler_kwargs: Optional[dict] = None,
                  profiler: Optional[PerformanceProfiler] = None):
         self.pool = pool
         self.target = target
+        # device-resident cycles: run each sub-cycle group as one jitted
+        # program, with periodic unfused profiling cycles every
+        # ``profile_every`` steps (0 = never; when enabled, cycle 0 is a
+        # profiling cycle so the scheduler starts with real per-op
+        # timings).  ``fused=False`` keeps the host-orchestrated per-op
+        # loop everywhere as the A/B baseline.
+        self.fused = fused
+        self.profile_every = int(profile_every)
         # per-slot chain routing + lazy chain membership (the default):
         # each slot is scheduled independently and holds state only in
         # its assigned chain's models.  ``slot_routing=False`` keeps the
@@ -580,15 +607,17 @@ class ChainRouter:
         next_token = np.asarray(res.next_token)
 
         # --- consensus rollback (paper §4.3 RollbackProcessor) -------------
-        # level j in [1..N-1] holds a candidate of length W + (j-1);
-        # consensus_j = min(k_j, ..., k_N) in shared position coordinates.
+        # level j in [1..N-1] holds a candidate of length W + (j-1) and
+        # rolls back to min(k_j, ..., k_N) — the shared pure function also
+        # runs inside the fused cycle program, so both paths settle states
+        # identically.
         ks_arr = np.stack(ks, axis=0)               # (N-1, B)
+        rbs = np.asarray(ver.consensus_rollbacks(
+            jnp.asarray(ks_arr), W, jnp.asarray(active)))
         for j, m in enumerate(chain[:-1], start=1):
-            tc_j = W + (j - 1)
-            consensus = ks_arr[j - 1:].min(axis=0)
-            r = np.where(active, tc_j - np.minimum(consensus, tc_j), 0)
             self.executor.rollback(RollbackRequest(
-                model=m, request_id=request_id, r=r.astype(np.int32)))
+                model=m, request_id=request_id,
+                r=rbs[j - 1].astype(np.int32)))
         # target rolls back its own rejects
         self.executor.rollback(RollbackRequest(
             model=chain[-1], request_id=request_id,
@@ -683,20 +712,15 @@ class ChainRouter:
         # --- consensus resolve (tree analogue of RollbackProcessor) --------
         # level j keeps the winning-path prefix that IT and every deeper
         # level accepted: min over the per-level accepted depths along the
-        # target's winning path (the draft keeps the min over all levels).
-        counts = []
-        for acc in accepts:
-            onpath = np.take_along_axis(acc, path, axis=1).astype(np.int64)
-            counts.append(np.minimum(
-                np.sum(np.cumprod(onpath, axis=1), axis=1), k_N))
-        counts_arr = np.stack(counts, axis=0)        # (len(chain)-1, B)
+        # target's winning path (the draft keeps the min over all levels);
+        # the shared pure function also runs inside the fused tree program.
+        keeps = np.asarray(ver.tree_consensus_keep(
+            [jnp.asarray(a) for a in accepts], jnp.asarray(path),
+            jnp.asarray(k_N), jnp.asarray(active)))
         for j, m in enumerate(chain):
-            c = (counts_arr.min(axis=0) if j == 0
-                 else counts_arr[j - 1:].min(axis=0))
-            c = np.where(active, c, 0).astype(np.int32)
             self.executor.resolve_tree(ResolveTreeRequest(
                 model=m, request_id=request_id, tree=tree,
-                path_nodes=path, keep_len=c, active=active))
+                path_nodes=path, keep_len=keeps[j], active=active))
 
         # --- commit the winning path + correction/bonus --------------------
         path_tokens = np.take_along_axis(cand, path, axis=1)   # (B, D)
@@ -762,6 +786,19 @@ class RouterSession:
         self._slot_choice: List[Optional[ChainChoice]] = [None] * B
         self._forced: np.ndarray = np.zeros(B, bool)  # admit(chain=...)
         self._global_choice: Optional[ChainChoice] = None  # legacy engine
+        # device-resident session buffers (fused cycles): the numpy arrays
+        # above are the HOST MIRROR, rebuilt exactly from each fused
+        # cycle's summary slab; ``_dev`` holds the authoritative device
+        # copies between fused cycles and is re-uploaded whenever a host
+        # path (admission, retirement, an unfused profiling cycle) has
+        # mutated the mirror (``_dev_stale``).
+        self._dev: Optional[Dict[str, jax.Array]] = None
+        self._dev_stale = True
+        # summary-fed host views of per-model cache cursors, so the fused
+        # path's gap/capacity preflight costs no device sync; cleared by
+        # any host-path state op (prefill/insert/free/unfused cycle)
+        self._len_cache: Dict[str, np.ndarray] = {}
+        self._wp_cache: Dict[str, tuple] = {}
 
     # ---- scheduling helpers -------------------------------------------
     def _skey(self, slot: int) -> str:
@@ -791,6 +828,14 @@ class RouterSession:
         return tuple(self.router.pool.names())
 
     # ---- membership surgery -------------------------------------------
+    def _invalidate_state_caches(self) -> None:
+        """A host-path state op ran (prefill/insert/free/unfused cycle):
+        the summary-fed cursor views are stale — drop them; the next fused
+        preflight re-reads from the live states (that path just synced
+        anyway, so the extra read is free)."""
+        self._len_cache.clear()
+        self._wp_cache.clear()
+
     def _materialize_row(self, m: str, slot: int) -> Optional[np.ndarray]:
         """Ensure model ``m`` holds slot ``slot``'s committed stream:
         create the session state (row-scoped prefill) if this is the
@@ -802,6 +847,7 @@ class RouterSession:
         mem = self._members.setdefault(m, np.zeros(B, bool))
         if mem[slot]:
             return None
+        self._invalidate_state_caches()
         sid = StateManager.key(m, self.session_id)
         if not r.states.exists(sid):
             rows = np.zeros(B, bool)
@@ -824,6 +870,7 @@ class RouterSession:
         mem = self._members.get(m)
         if mem is None or not mem[slot]:
             return
+        self._invalidate_state_caches()
         rows = np.zeros(self.num_slots, bool)
         rows[slot] = True
         self.router.executor.retire(m, self.session_id, rows)
@@ -846,6 +893,7 @@ class RouterSession:
             missing = rows & ~mem
             if not missing.any():
                 continue
+            self._invalidate_state_caches()
             sid = StateManager.key(m, self.session_id)
             if not r.states.exists(sid):
                 r._prefill_model(m, self.session_id, self.seq,
@@ -904,7 +952,8 @@ class RouterSession:
         else:
             choice = None
         t0 = _time.perf_counter()
-        self.seq[slot, :] = 0
+        self._dev_stale = True      # host mirror mutates: re-upload before
+        self.seq[slot, :] = 0       # the next fused cycle
         self.seq[slot, :Lp] = prompt
         self.seq_len[slot] = Lp
         self.prompt_len[slot] = Lp
@@ -935,6 +984,8 @@ class RouterSession:
         it, seeding global + per-slot similarity from the probe."""
         r = self.router
         B = self.num_slots
+        self._dev_stale = True
+        self._invalidate_state_caches()
         occ = np.where(self.occupied)[0]
         for s in occ:
             if self._slot_choice[s] is None:
@@ -994,6 +1045,177 @@ class RouterSession:
                     self._release_member(m, int(s))
             self._slot_choice[s] = new
 
+    # ---- device-resident fused cycles ---------------------------------
+    def _sync_device(self) -> None:
+        """Upload the host mirror into the device session buffers if a
+        host path mutated it since the last fused cycle."""
+        if self._dev is not None and not self._dev_stale:
+            return
+        self._dev = {
+            "seq": jnp.asarray(self.seq),
+            "seq_len": jnp.asarray(self.seq_len.astype(np.int32)),
+            "prompt_len": jnp.asarray(self.prompt_len.astype(np.int32)),
+            "budget": jnp.asarray(self.budget.astype(np.int32)),
+            "active": jnp.asarray(self.active),
+        }
+        self._dev_stale = False
+
+    def _cached_lengths(self, m: str) -> np.ndarray:
+        """Per-row cache lengths for model ``m`` — the summary-fed view
+        when fresh, else one read from the live state."""
+        v = self._len_cache.get(m)
+        if v is None:
+            v = self.router.states.lengths(
+                StateManager.key(m, self.session_id))
+            self._len_cache[m] = v
+        return v
+
+    def _chain_timed(self, chain: Tuple[str, ...], tree) -> bool:
+        """True when every chain member has per-op timing evidence (the
+        scheduler's Eq. 7 inputs): draft decode (decode_level for the
+        tree's shape) and a verify EMA per verifier level."""
+        emas = self.router.profiler.emas
+        draft_key = (("decode_level", chain[0], tree.branching)
+                     if tree is not None else ("decode1", chain[0]))
+        e = emas.get(draft_key)
+        if e is None or e.count == 0:
+            return False
+        for m in chain[1:]:
+            if not any(k[0] == "verify" and k[1] == m and e.count
+                       for k, e in emas.items() if len(k) == 3):
+                return False
+        return True
+
+    def _fused_capacity_ok(self, m: str, needed: int,
+                           rows: np.ndarray) -> bool:
+        """Non-mutating mirror of ``_ensure_capacity``: True when model
+        ``m`` can absorb ``needed`` more entries for every row in ``rows``
+        without a defrag/rebuild escape (which only the per-op path runs)."""
+        from ..models.kv_cache import PagedModelState
+        r = self.router
+        st = r.states.get(StateManager.key(m, self.session_id))
+        info = self._wp_cache.get(m)
+        if isinstance(st, PagedModelState):
+            if info is None:
+                info = (np.asarray(st.write_ptr), int(st.free_top),
+                        np.asarray(st.num_blocks))
+                self._wp_cache[m] = info
+            wp, free_top, nb = info
+            sel = np.asarray(rows, bool)
+            if not sel.any():
+                return True
+            high = wp[sel] + needed
+            new_blocks = np.maximum(
+                -(-high // st.block_size) - nb[sel], 0)
+            return bool(high.max() <= st.capacity
+                        and int(new_blocks.sum()) <= int(free_top))
+        if info is None:
+            info = (np.asarray(st.write_ptr), None, None)
+            self._wp_cache[m] = info
+        return bool(int(np.max(info[0])) + needed <= st.capacity)
+
+    def _run_fused_group(self, choice: ChainChoice, gmask: np.ndarray,
+                         slot_keys: Optional[Sequence[str]]
+                         ) -> Optional[np.ndarray]:
+        """Run one sub-cycle group as a single device program.  Returns
+        per-row raw commits, or None when the group must fall back to the
+        per-op path this cycle (capacity pressure, or a catch-up gap wider
+        than the program's static prefix — both are the legacy path's
+        escape hatches)."""
+        r = self.router
+        chain = choice.chain
+        tree = choice.tree if (choice.tree is not None
+                               and len(chain) > 1) else None
+        # a chain member with NO per-op timing evidence yet (a freshly
+        # explored model) runs per-op this cycle: fused cycles produce no
+        # T_i measurements, so without this the scheduler could keep
+        # exploring a slow chain forever between profiling cycles — the
+        # first cycle of any new chain doubles as its profiling cycle
+        # (benchmarks/routing_ab.py pins the resulting decoy-kill
+        # behaviour under the fused default)
+        if not self._chain_timed(chain, tree):
+            return None
+        depth = tree.depth_levels if tree is not None else choice.window
+        # prefix-width bound: the worst-case consensus gap is the target's
+        # max accepted length (W + N - 2 linear, D tree); +1 for t_last,
+        # +1 slack.  target-only chains never lag by more than 1.
+        p_max = (depth + len(chain)) if len(chain) > 1 else 2
+        gmax = 0
+        for m in chain:
+            lens = self._cached_lengths(m)
+            gap = np.where(gmask, (self.seq_len - 1) - lens, 0)
+            if gap.min() < 0 or gap.max() > p_max - 1:
+                return None          # needs the re-prefill escape
+            gmax = max(gmax, int(gap.max()))
+        # pow-2 prefix-width buckets (min 2 = [t_last] + 1 gap slot), like
+        # the per-op path's gap buckets: the steady-state cycle (gap 0)
+        # runs the narrow program; wide variants compile only when a real
+        # catch-up gap appears, instead of every cycle paying p_max-wide
+        # draft/verify blocks
+        P = 2
+        while P - 1 < gmax:
+            P *= 2
+        P = min(P, p_max)
+        block = tree.num_nodes if tree is not None else choice.window
+        needed = P + block + len(chain)
+        for m in chain:
+            if not self._fused_capacity_ok(m, needed, gmask):
+                return None          # needs the defrag/rebuild escape
+        self._sync_device()
+        rngs = tuple(r._next_rng() for _ in chain)
+        try:
+            bufs, s = r.executor.fused_cycle(FusedCycleRequest(
+                chain=chain, request_id=self.session_id,
+                window=choice.window, tree=tree, prefix_width=P, eos=r.eos,
+                seq=self._dev["seq"], seq_len=self._dev["seq_len"],
+                prompt_len=self._dev["prompt_len"],
+                budget=self._dev["budget"], active=self._dev["active"],
+                gmask=jnp.asarray(gmask), rngs=rngs, greedy=r.greedy,
+                temperature=r.temperature))
+        except Exception:
+            # a runtime failure consumed the donated device buffers: drop
+            # them so a caller that survives the error re-uploads the
+            # (still-exact) host mirror instead of passing deleted arrays
+            # into the next program
+            self._dev = None
+            self._dev_stale = True
+            raise
+        self._dev.update(bufs)
+        # --- mirror the one-transfer summary onto the host ----------------
+        cnum = s.n_committed.astype(np.int64)
+        rows = np.where(cnum > 0)[0]
+        if rows.size:
+            keep = (np.arange(s.slab.shape[1])[None, :]
+                    < cnum[rows][:, None])
+            rr, cc = np.nonzero(keep)
+            self.seq[rows[rr], self.seq_len[rows][rr] + cc] = \
+                s.slab[rows[rr], cc]
+        self.seq_len[:] = np.where(gmask, s.new_seq_len, self.seq_len)
+        self.active[:] = np.where(gmask, s.new_active, self.active)
+        for i, m in enumerate(chain):
+            self._len_cache[m] = s.lengths[i]
+            self._wp_cache[m] = (s.write_ptr[i], int(s.free_top[i]),
+                                 s.num_blocks[i])
+        # --- feedback loops (same signals/keys the per-op cycle emits) ----
+        # tree cycles verify the DRAFT's candidate probs at every level,
+        # so DTV is attributed to the (draft, verifier) pair; the accept
+        # counters bill adjacent chain edges on both paths
+        any_run = bool(gmask.any())
+        for lvl in range(s.accepts.shape[0]):
+            sim_prod = chain[0] if tree is not None else chain[lvl]
+            verif = chain[lvl + 1]
+            if any_run:
+                r.sims.update(sim_prod, verif,
+                              float(np.mean(s.dtv[lvl][gmask])))
+                r._observe_slots(slot_keys, sim_prod, verif, s.dtv[lvl],
+                                 gmask)
+            r.profiler.count(f"accept.{chain[lvl]}->{verif}",
+                             float(np.sum(s.accepts[lvl][gmask])))
+        if len(chain) > 1:
+            r.profiler.count("cycles")
+            r.profiler.count("committed", float(cnum.sum()))
+        return cnum
+
     def run_cycle(self) -> CycleReport:
         """One speculative cycle over every active slot (DECODING step).
         Active slots are grouped by their assigned (chain, window, tree)
@@ -1001,7 +1223,11 @@ class RouterSession:
         their static shapes, rows outside the group ride along as no-ops,
         and per-slot greedy output is bit-exact to target-only decoding
         regardless of the grouping.  Per-slot budget/EOS termination is
-        applied after the cycle."""
+        applied after the cycle.
+
+        With ``router.fused`` (default) each group is one device program
+        and one host transfer; every ``profile_every``-th cycle instead
+        runs the per-op path to refresh the scheduler's timings."""
         r = self.router
         B = self.num_slots
         if not self.active.any():
@@ -1024,6 +1250,8 @@ class RouterSession:
         gen_before = (self.seq_len - self.prompt_len).copy()
         n_acc = np.zeros(B, np.int64)
         ginfo: List[Tuple[Tuple[str, ...], int, int]] = []
+        profiling = (not r.fused) or (r.profile_every > 0
+                                      and self.steps % r.profile_every == 0)
         t0 = _time.perf_counter()
         for key in order:
             gmask = groups[key] & self.active
@@ -1032,10 +1260,20 @@ class RouterSession:
             first = int(np.where(gmask)[0][0])
             choice = self._slot_choice[first]
             self._ensure_members(choice.chain, gmask)
-            acc = r._one_cycle(choice.chain, choice.window,
-                               self.session_id, self.seq, self.seq_len,
-                               gmask, tree=choice.tree,
-                               members=self._members, slot_keys=slot_keys)
+            acc = None
+            if r.fused and not profiling:
+                acc = self._run_fused_group(choice, gmask, slot_keys)
+            if acc is None:          # profiling cycle or fused fallback
+                acc = r._one_cycle(choice.chain, choice.window,
+                                   self.session_id, self.seq,
+                                   self.seq_len, gmask, tree=choice.tree,
+                                   members=self._members,
+                                   slot_keys=slot_keys)
+                # the per-op path mutated host state directly: device
+                # buffers and summary-fed cursor views are stale (a later
+                # fused group this cycle must re-upload)
+                self._dev_stale = True
+                self._invalidate_state_caches()
             n_acc += np.asarray(acc, np.int64)   # groups are row-disjoint
             self.chain_history.append((choice.chain, choice.window))
             ginfo.append((choice.chain, choice.window, int(gmask.sum())))
@@ -1074,6 +1312,7 @@ class RouterSession:
         out = self.generated(slot)
         for m in list(self._members):
             self._release_member(m, slot)
+        self._dev_stale = True
         self.occupied[slot] = False
         self.active[slot] = False
         self.seq_len[slot] = 0
@@ -1092,3 +1331,6 @@ class RouterSession:
         self._members.clear()
         self._slot_choice = [None] * self.num_slots
         self._forced[:] = False
+        self._dev = None
+        self._dev_stale = True
+        self._invalidate_state_caches()

@@ -11,12 +11,26 @@ via the StateManager, and wraps every call with PerformanceProfiler timing
 All device computation goes through per-(model, op, shape) jitted callables
 cached here; tree programs additionally specialize on the static tree
 shape (one compile per (model, branching)).
+
+Fused cycle executor (device-resident speculative cycles): one jitted
+program per (chain, window | tree) group runs the ENTIRE cycle on device —
+gap catch-up prefixes, the draft scan, every intermediate level's
+verify + prune, the final target verify, consensus rollback/resolve, the
+commit into device-resident session buffers (seq / seq_len / active), and
+per-row budget/EOS termination — with the chain members' model states and
+the session buffers donated through ``jax.jit``.  Probabilities never
+leave the device; a single small ``FusedSummary`` (the newly committed
+token slab, per-level accept counts and DTV rows, per-model cache cursors)
+crosses to host in ONE transfer per group per cycle.  The per-op
+processors above stay as the bit-exact A/B baseline and as the periodic
+profiling path that refreshes the scheduler's per-op timings.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,6 +158,229 @@ class InsertRequest:
     valid: np.ndarray             # (B, T) bool
 
 
+@dataclasses.dataclass
+class FusedCycleRequest:
+    """One whole speculative cycle for a (chain, window | tree) group,
+    executed as a single jitted program over DEVICE-RESIDENT session
+    buffers.  ``gmask`` is the group's slot mask (rows outside ride along
+    as no-ops); ``rngs`` carries one key per chain position (draft +
+    each verify level) so the session RNG stream advances exactly as the
+    per-op path would."""
+    chain: Tuple[str, ...]
+    request_id: str               # session id (state key namespace)
+    window: int
+    tree: Optional[TokenTree]     # None = linear window draft
+    prefix_width: int             # static gap-prefix width (incl. t_last)
+    eos: int                      # EOS token id, -1 = none
+    seq: jax.Array                # (B, S) int32 device session buffer
+    seq_len: jax.Array            # (B,) int32
+    prompt_len: jax.Array         # (B,) int32
+    budget: jax.Array             # (B,) int32
+    active: jax.Array             # (B,) bool — session-wide live mask
+    gmask: jax.Array              # (B,) bool — this group's slots
+    rngs: Tuple[jax.Array, ...]   # len(chain) keys
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class FusedSummary(NamedTuple):
+    """The ONE device→host transfer of a fused cycle (everything the host
+    needs to mirror the device buffers and feed the feedback loops)."""
+    slab: jnp.ndarray             # (B, C) newly committed tokens (raw)
+    n_committed: jnp.ndarray      # (B,) int32 raw commits (pre-termination)
+    new_seq_len: jnp.ndarray      # (B,) int32 post-termination
+    new_active: jnp.ndarray       # (B,) bool post-termination
+    accepts: jnp.ndarray          # (L-1, B) int32 per-level accepted counts
+    dtv: jnp.ndarray              # (L-1, B) f32 per-level DTV rows
+    lengths: jnp.ndarray          # (M, B) int32 per-model cache lengths
+    write_ptr: jnp.ndarray        # (M, B) int32 per-model append cursors
+    free_top: jnp.ndarray         # (M,) int32 paged free blocks (or big)
+    num_blocks: jnp.ndarray       # (M, B) int32 paged blocks (contig: 0)
+
+
+# ---------------------------------------------------------------------------
+# Fused-cycle device helpers (pure jnp, traced inside the fused program)
+# ---------------------------------------------------------------------------
+_BIG = jnp.int32(2 ** 30)     # OOB sentinel for mode="drop" scatters
+_NO_POOL = 2 ** 30            # free_top sentinel for contiguous states
+
+
+def _draft_scan_body(lm, window: int, greedy: bool, temperature: float):
+    """The whole-window draft program body (prefix pass + (W-1)-step
+    lax.scan).  Shared verbatim by the standalone jitted DraftProcessor and
+    the fused cycle program, so both paths run the same math."""
+    def sample(logits, k):
+        lt = logits.astype(jnp.float32) / temperature
+        probs = jax.nn.softmax(lt, -1)
+        if greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32), probs
+        return jax.random.categorical(k, lt).astype(jnp.int32), probs
+
+    def body(params, state, prefix_tokens, prefix_valid, active, rng):
+        logits, state = lm.decode(params, state, prefix_tokens,
+                                  valid=prefix_valid & active[:, None],
+                                  logits_mode="all")
+        rng, k0 = jax.random.split(rng)
+        tok0, probs0 = sample(logits[:, -1], k0)
+
+        def step(carry, k):
+            state, tok = carry
+            lg, state = lm.decode(params, state, tok[:, None],
+                                  valid=active[:, None],
+                                  logits_mode="all")
+            nxt, probs = sample(lg[:, -1], k)
+            return (state, nxt), (tok, probs)
+
+        keys = jax.random.split(rng, max(window - 1, 1))
+        if window > 1:
+            (state, last), (toks, probs) = jax.lax.scan(
+                step, (state, tok0), keys[:window - 1])
+            all_toks = jnp.concatenate(
+                [jnp.swapaxes(toks, 0, 1), last[:, None]], axis=1)
+            all_probs = jnp.concatenate(
+                [probs0[:, None], jnp.swapaxes(probs, 0, 1)], axis=1)
+        else:
+            all_toks = tok0[:, None]
+            all_probs = probs0[:, None]
+        return all_toks, all_probs, state
+
+    return body
+
+
+def _draft_tree_body(lm, tree: TokenTree, greedy: bool, temperature: float):
+    """Whole-tree draft program body (prefix pass + D level expansions),
+    shared by the DraftTreeProcessor jit and the fused tree program."""
+    D = tree.depth_levels
+    sizes = tree.level_sizes
+
+    def body(params, state, prefix_tokens, prefix_valid, active, rng):
+        B = prefix_tokens.shape[0]
+        logits, state = lm.decode(params, state, prefix_tokens,
+                                  valid=prefix_valid & active[:, None],
+                                  logits_mode="all")
+        par_logits = logits[:, -1:]                  # (B, 1, V)
+        toks_all, probs_all = [], []
+        for d in range(D):
+            n_par = par_logits.shape[1]
+            bd = tree.branching[d]
+            V = par_logits.shape[-1]
+            lt = par_logits.astype(jnp.float32) / temperature
+            par_probs = jax.nn.softmax(lt, axis=-1)
+            if greedy:
+                _, idx = kops.draft_topk(lt.reshape(B * n_par, V), bd)
+                toks_d = idx.reshape(B, n_par * bd).astype(jnp.int32)
+            else:
+                rng, kd = jax.random.split(rng)
+                lt_rep = jnp.repeat(lt, bd, axis=1)  # (B, n_par*bd, V)
+                toks_d = jax.random.categorical(
+                    kd, lt_rep, axis=-1).astype(jnp.int32)
+            probs_d = jnp.repeat(par_probs, bd, axis=1)
+            lg, state = lm.decode(
+                params, state, toks_d,
+                valid=jnp.broadcast_to(active[:, None], toks_d.shape),
+                logits_mode="all",
+                spec_depth=jnp.full((sizes[d],), d, jnp.int32),
+                spec_attend=jnp.asarray(tree.level_attend(d)))
+            par_logits = lg
+            toks_all.append(toks_d)
+            probs_all.append(probs_d)
+        return (jnp.concatenate(toks_all, axis=1),
+                jnp.concatenate(probs_all, axis=1), state)
+
+    return body
+
+
+def _gap_prefix_dev(state, seq, seq_len, run, width: int):
+    """Device analogue of ``ChainRouter._gap_prefix`` with a STATIC width:
+    [pads…, gap tokens…, t_last] per row, valid-masked.  Identical valid
+    content to the host version (which buckets the width), so the decode
+    appends the same logical entries."""
+    S = seq.shape[1]
+    cache_len = state.length.astype(jnp.int32)
+    gap = jnp.where(run, (seq_len - 1) - cache_len, 0)
+    cols = jnp.arange(width, dtype=jnp.int32)[None, :]
+    off = cols - (width - 1 - gap[:, None])
+    gmask = (off >= 0) & (cols < width - 1)
+    src = jnp.clip(jnp.where(gmask, cache_len[:, None] + off, 0), 0, S - 1)
+    pfx = jnp.where(gmask, jnp.take_along_axis(seq, src, axis=1), 0)
+    last = jnp.clip(seq_len - 1, 0, S - 1)
+    t_last = jnp.take_along_axis(seq, last[:, None], axis=1)[:, 0]
+    pfx = pfx.at[:, -1].set(jnp.where(run, t_last, 0))
+    pval = gmask.at[:, -1].set(run)
+    return pfx.astype(jnp.int32), pval
+
+
+def _commit_dev(seq, seq_len, run, cand, k, next_token, slab_width: int):
+    """Device analogue of ``ChainRouter._commit_rows``: scatter the
+    accepted prefix + correction/bonus into the device ``seq`` buffer.
+    Returns (seq, new_seq_len, slab (B, C), n_committed (B,))."""
+    B = seq.shape[0]
+    j = jnp.arange(slab_width, dtype=jnp.int32)[None, :]
+    pad = slab_width - cand.shape[1]
+    cand_pad = jnp.concatenate(
+        [cand.astype(jnp.int32), jnp.zeros((B, pad), jnp.int32)], axis=1)
+    k = k.astype(jnp.int32)
+    slab = jnp.where(j < k[:, None], cand_pad, 0)
+    slab = jnp.where(j == k[:, None],
+                     next_token.astype(jnp.int32)[:, None], slab)
+    cnum = jnp.where(run, k + 1, 0).astype(jnp.int32)
+    tgt = jnp.where(j < cnum[:, None], seq_len[:, None] + j, _BIG)
+    seq = seq.at[jnp.arange(B)[:, None], tgt].set(slab, mode="drop")
+    return seq, seq_len + cnum, slab, cnum
+
+
+def _terminate_dev(slab, run, seq_len_old, new_len, prompt_len,
+                   budget, active, eos: int):
+    """Device analogue of ``ChainRouter._apply_termination``, bounded to
+    this cycle's commit slab: budget clamp first, then the EOS scan up to
+    the (possibly clamped) new length.  Rows outside ``run`` keep their
+    session values."""
+    cap = prompt_len + budget
+    over = run & ((new_len - prompt_len) >= budget)
+    len1 = jnp.minimum(new_len, cap)
+    alive = run & ~over
+    if eos >= 0:
+        C = slab.shape[1]
+        jj = jnp.arange(C, dtype=jnp.int32)[None, :]
+        within = jj < (len1 - seq_len_old)[:, None]
+        hit = (slab == eos) & within & run[:, None]
+        has = jnp.any(hit, axis=1)
+        first = jnp.argmax(hit, axis=1).astype(jnp.int32)
+        len1 = jnp.where(has, seq_len_old + first + 1, len1)
+        alive = alive & ~has
+    new_seq_len = jnp.where(run, len1, seq_len_old)
+    new_active = jnp.where(run, alive, active)
+    return new_seq_len.astype(jnp.int32), new_active
+
+
+def _wp_rows(st) -> jnp.ndarray:
+    wp = st.write_ptr.astype(jnp.int32)
+    if wp.ndim == 0:            # contiguous: shared pointer, broadcast
+        wp = jnp.broadcast_to(wp[None], (st.batch,))
+    return wp
+
+
+def _free_top_of(st) -> jnp.ndarray:
+    ft = getattr(st, "free_top", None)
+    if ft is None:
+        return jnp.asarray(_NO_POOL, jnp.int32)
+    return ft.astype(jnp.int32)
+
+
+def _num_blocks_of(st) -> jnp.ndarray:
+    nb = getattr(st, "num_blocks", None)
+    if nb is None:
+        return jnp.zeros((st.batch,), jnp.int32)
+    return nb.astype(jnp.int32)
+
+
+def _state_summary(states) -> Tuple[jnp.ndarray, ...]:
+    return (jnp.stack([st.length.astype(jnp.int32) for st in states]),
+            jnp.stack([_wp_rows(st) for st in states]),
+            jnp.stack([_free_top_of(st) for st in states]),
+            jnp.stack([_num_blocks_of(st) for st in states]))
+
+
 class Executor:
     def __init__(self, pool: ModelPool, states: StateManager,
                  profiler: PerformanceProfiler):
@@ -211,6 +448,7 @@ class Executor:
                 params, state, jnp.asarray(req.tokens),
                 jnp.asarray(req.valid), req.extras)
             logits = jax.block_until_ready(logits)
+        self.profiler.count("host_sync")
         self.states.create(sid, state, layer_axes=state_axes.layers)
         probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
         return np.asarray(probs), sid
@@ -231,6 +469,7 @@ class Executor:
                                      jnp.asarray(req.tokens),
                                      jnp.asarray(req.valid), {})
             logits = jax.block_until_ready(logits)
+        self.profiler.count("host_sync")
         self.states.update(sid, state)
         probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
         return np.asarray(probs)
@@ -240,52 +479,30 @@ class Executor:
         a session state (logical release + recurrent-carry wipe)."""
         self.states.free_rows(StateManager.key(model, request_id), rows)
 
+    def _req_rng(self, rng: Optional[jax.Array], greedy: bool, op: str):
+        """Sampling without an explicit rng is a silent-nondeterminism
+        footgun: the old ``PRNGKey(0)`` fallback repeated IDENTICAL draws
+        every cycle.  Greedy ops never read the key (a constant stand-in
+        is fine); sampling ops must be given the session RNG."""
+        if rng is not None:
+            return rng
+        if not greedy:
+            raise ValueError(
+                f"{op}: sampling requested without an rng — thread the "
+                "session RNG (ChainRouter._next_rng) through the request")
+        return jax.random.PRNGKey(0)
+
     def _draft_scan(self, model: str, window: int, greedy: bool,
                     temperature: float):
         """Whole-window drafting fused into ONE jitted program: the prefix
         pass + (W-1) decode steps run as a lax.scan, eliminating W host
-        round-trips per cycle (§Perf serving-path iteration 1)."""
+        round-trips per cycle (§Perf serving-path iteration 1).  The body
+        is shared with the fused cycle program (``_draft_scan_body``)."""
         key = ("draftscan", model, window, greedy, temperature)
         if key in self._jit_cache:
             return self._jit_cache[key]
-        lm = self.pool.model(model)
-
-        def sample(logits, k):
-            lt = logits.astype(jnp.float32) / temperature
-            probs = jax.nn.softmax(lt, -1)
-            if greedy:
-                return jnp.argmax(logits, -1).astype(jnp.int32), probs
-            return jax.random.categorical(k, lt).astype(jnp.int32), probs
-
-        @jax.jit
-        def f(params, state, prefix_tokens, prefix_valid, active, rng):
-            logits, state = lm.decode(params, state, prefix_tokens,
-                                      valid=prefix_valid & active[:, None],
-                                      logits_mode="all")
-            rng, k0 = jax.random.split(rng)
-            tok0, probs0 = sample(logits[:, -1], k0)
-
-            def step(carry, k):
-                state, tok = carry
-                lg, state = lm.decode(params, state, tok[:, None],
-                                      valid=active[:, None],
-                                      logits_mode="all")
-                nxt, probs = sample(lg[:, -1], k)
-                return (state, nxt), (tok, probs)
-
-            keys = jax.random.split(rng, max(window - 1, 1))
-            if window > 1:
-                (state, last), (toks, probs) = jax.lax.scan(
-                    step, (state, tok0), keys[:window - 1])
-                all_toks = jnp.concatenate(
-                    [jnp.swapaxes(toks, 0, 1), last[:, None]], axis=1)
-                all_probs = jnp.concatenate(
-                    [probs0[:, None], jnp.swapaxes(probs, 0, 1)], axis=1)
-            else:
-                all_toks = tok0[:, None]
-                all_probs = probs0[:, None]
-            return all_toks, all_probs, state
-
+        f = jax.jit(_draft_scan_body(self.pool.model(model), window,
+                                     greedy, temperature))
         self._jit_cache[key] = f
         return f
 
@@ -296,20 +513,20 @@ class Executor:
         params = self.pool.params(req.model)
         sid = StateManager.key(req.model, req.request_id)
         state = self.states.get(sid)
-        rng = req.rng if req.rng is not None else jax.random.PRNGKey(0)
+        rng = self._req_rng(req.rng, req.greedy, "draft")
         f = self._draft_scan(req.model, req.window, req.greedy,
                              req.temperature)
-        import time as _time
-        t0 = _time.perf_counter()
+        t0 = time.perf_counter()
         toks, probs, state = f(params, state,
                                jnp.asarray(req.prefix_tokens),
                                jnp.asarray(req.prefix_valid),
                                jnp.asarray(req.active), rng)
         toks = jax.block_until_ready(toks)
-        dt = _time.perf_counter() - t0
+        dt = time.perf_counter() - t0
         # amortized per-token draft time feeds the scheduler's T_i
         self.profiler.record("decode1", req.model, dt / req.window,
                              tokens=req.window)
+        self.profiler.count("host_sync")
         self.states.update(sid, state)
         return np.asarray(toks), np.asarray(probs)
 
@@ -329,11 +546,16 @@ class Executor:
             [req.prefix_valid, np.ones_like(req.candidates, bool)], axis=1)
         bvalid = jnp.asarray(bvalid) & active[:, None]
 
-        with self.profiler.timed("verify", req.model, tokens=Tc,
-                                 block=Tc + 1):
-            logits, state = fwd_all(params, state, jnp.asarray(block),
-                                    bvalid, {})
-            logits = jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        logits, state = fwd_all(params, state, jnp.asarray(block),
+                                bvalid, {})
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.profiler.record("verify", req.model, dt, tokens=Tc,
+                             block=Tc + 1)
+        # amortized per-token verify time (the decode1 analogue)
+        self.profiler.record("verify1", req.model, dt / (Tc + 1))
+        self.profiler.count("host_sync")
         self.states.update(sid, state)
 
         vlogits = logits[:, G1 - 1:]             # (B, Tc+1, V)
@@ -352,7 +574,8 @@ class Executor:
             res = self._jit_cache[key](cands, vlogits, cprobs, active)
         else:
             res = self._jit_cache[key](
-                cands, vlogits, cprobs, req.rng, active=active,
+                cands, vlogits, cprobs,
+                self._req_rng(req.rng, req.greedy, "verify"), active=active,
                 valid_len=(jnp.asarray(req.valid_len)
                            if req.valid_len is not None else None))
         return jax.tree.map(np.asarray, res)
@@ -366,6 +589,7 @@ class Executor:
                                  tokens=int(req.r.sum())):
             state = self._rollback(req.model)(state, jnp.asarray(req.r))
             jax.block_until_ready(state.write_ptr)
+        self.profiler.count("host_sync")
         self.states.update(sid, state)
 
     # ------------------------------------------------------------------
@@ -384,45 +608,8 @@ class Executor:
         key = ("drafttree", model, tree.branching, greedy, temperature)
         if key in self._jit_cache:
             return self._jit_cache[key]
-        lm = self.pool.model(model)
-        D = tree.depth_levels
-        sizes = tree.level_sizes
-
-        @jax.jit
-        def f(params, state, prefix_tokens, prefix_valid, active, rng):
-            B = prefix_tokens.shape[0]
-            logits, state = lm.decode(params, state, prefix_tokens,
-                                      valid=prefix_valid & active[:, None],
-                                      logits_mode="all")
-            par_logits = logits[:, -1:]                  # (B, 1, V)
-            toks_all, probs_all = [], []
-            for d in range(D):
-                n_par = par_logits.shape[1]
-                bd = tree.branching[d]
-                V = par_logits.shape[-1]
-                lt = par_logits.astype(jnp.float32) / temperature
-                par_probs = jax.nn.softmax(lt, axis=-1)
-                if greedy:
-                    _, idx = kops.draft_topk(lt.reshape(B * n_par, V), bd)
-                    toks_d = idx.reshape(B, n_par * bd).astype(jnp.int32)
-                else:
-                    rng, kd = jax.random.split(rng)
-                    lt_rep = jnp.repeat(lt, bd, axis=1)  # (B, n_par*bd, V)
-                    toks_d = jax.random.categorical(
-                        kd, lt_rep, axis=-1).astype(jnp.int32)
-                probs_d = jnp.repeat(par_probs, bd, axis=1)
-                lg, state = lm.decode(
-                    params, state, toks_d,
-                    valid=jnp.broadcast_to(active[:, None], toks_d.shape),
-                    logits_mode="all",
-                    spec_depth=jnp.full((sizes[d],), d, jnp.int32),
-                    spec_attend=jnp.asarray(tree.level_attend(d)))
-                par_logits = lg
-                toks_all.append(toks_d)
-                probs_all.append(probs_d)
-            return (jnp.concatenate(toks_all, axis=1),
-                    jnp.concatenate(probs_all, axis=1), state)
-
+        f = jax.jit(_draft_tree_body(self.pool.model(model), tree,
+                                     greedy, temperature))
         self._jit_cache[key] = f
         return f
 
@@ -432,17 +619,16 @@ class Executor:
         params = self.pool.params(req.model)
         sid = StateManager.key(req.model, req.request_id)
         state = self.states.get(sid)
-        rng = req.rng if req.rng is not None else jax.random.PRNGKey(0)
+        rng = self._req_rng(req.rng, req.greedy, "draft_tree")
         f = self._draft_tree(req.model, req.tree, req.greedy,
                              req.temperature)
-        import time as _time
-        t0 = _time.perf_counter()
+        t0 = time.perf_counter()
         toks, probs, state = f(params, state,
                                jnp.asarray(req.prefix_tokens),
                                jnp.asarray(req.prefix_valid),
                                jnp.asarray(req.active), rng)
         toks = jax.block_until_ready(toks)
-        dt = _time.perf_counter() - t0
+        dt = time.perf_counter() - t0
         # per-LEVEL wall time keyed by the full branching profile (meta
         # block -> EMA key): a level forward decodes several sibling
         # nodes, so feeding it into the per-token decode1 EMA would
@@ -452,6 +638,10 @@ class Executor:
                              dt / req.tree.depth_levels,
                              tokens=req.tree.num_nodes,
                              block=req.tree.branching)
+        # amortized per-node draft time (the decode1 analogue for trees)
+        self.profiler.record("decode1_tree", req.model,
+                             dt / req.tree.num_nodes)
+        self.profiler.count("host_sync")
         self.states.update(sid, state)
         return np.asarray(toks), np.asarray(probs)
 
@@ -504,14 +694,19 @@ class Executor:
             [req.prefix_valid, np.ones_like(req.candidates, bool)], axis=1)
         bvalid = jnp.asarray(bvalid) & active[:, None]
         fwd = self._fwd_tree(req.model, req.tree, G1)
-        with self.profiler.timed("verify", req.model, tokens=N,
-                                 block=N + 1):
-            logits, state = fwd(params, state, jnp.asarray(block), bvalid)
-            logits = jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        logits, state = fwd(params, state, jnp.asarray(block), bvalid)
+        logits = jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self.profiler.record("verify", req.model, dt, tokens=N,
+                             block=N + 1)
+        # amortized per-node verify time (the decode1 analogue)
+        self.profiler.record("verify1", req.model, dt / (N + 1))
+        self.profiler.count("host_sync")
         self.states.update(sid, state)
 
         vlogits = logits[:, G1 - 1:]                 # (B, N+1, V)
-        rng = req.rng if req.rng is not None else jax.random.PRNGKey(0)
+        rng = self._req_rng(req.rng, req.greedy, "verify_tree")
         fmath = self._verify_tree_math(req.tree, req.greedy,
                                        req.temperature, req.final)
         res = fmath(jnp.asarray(req.candidates), vlogits,
@@ -526,17 +721,238 @@ class Executor:
 
             @jax.jit
             def f(state, path_nodes, keep_len, active):
-                depth_ok = (jnp.arange(D, dtype=jnp.int32)[None, :]
-                            < keep_len[:, None])                   # (B, D)
-                onehot = ((path_nodes[..., None]
-                           == jnp.arange(N, dtype=jnp.int32)[None, None, :])
-                          & depth_ok[..., None])                   # (B, D, N)
-                keep = jnp.any(onehot, axis=1)                     # (B, N)
+                keep = kvc.path_keep_matrix(path_nodes, keep_len, N, D)
                 return kvc.resolve_tree(state, N, keep, keep_len,
                                         active=active)
 
             self._jit_cache[key] = f
         return self._jit_cache[key]
+
+    # ------------------------------------------------------------------
+    # Fused cycle executor (device-resident speculative cycles)
+    # ------------------------------------------------------------------
+    def _build_fused_linear(self, lms, window: int, greedy: bool,
+                            temperature: float, P: int, eos: int):
+        """One program = one whole LINEAR cycle: gap prefixes for every
+        chain member, the draft scan, each level's verify (+ splice), the
+        consensus rollback, the commit into the device seq buffer, and
+        budget/EOS termination.  Mirrors ``ChainRouter._one_cycle`` op for
+        op (the math is the same shared functions), so greedy output is
+        bit-exact across paths."""
+        N = len(lms)
+        W = window
+        C = (W + N - 1) if N >= 2 else 1        # commit slab width
+        draft_body = _draft_scan_body(lms[0], W if N >= 2 else 1,
+                                      greedy, temperature)
+
+        def f(params, states, seq, seq_len, prompt_len, budget, active,
+              gmask, rngs):
+            states = list(states)
+            B = seq.shape[0]
+            run = active & gmask
+            sl32 = seq_len.astype(jnp.int32)
+            prefixes = [_gap_prefix_dev(st, seq, sl32, run, P)
+                        for st in states]
+            if N == 1:
+                pfx, pval = prefixes[0]
+                toks, _probs, st = draft_body(params[0], states[0], pfx,
+                                              pval, run, rngs[0])
+                states[0] = st
+                seq, new_len, slab, cnum = _commit_dev(
+                    seq, sl32, run, jnp.zeros((B, 0), jnp.int32),
+                    jnp.zeros((B,), jnp.int32), toks[:, 0], C)
+                accepts = jnp.zeros((0, B), jnp.int32)
+                dtvs = jnp.zeros((0, B), jnp.float32)
+            else:
+                pfx, pval = prefixes[0]
+                cand, cprobs, st = draft_body(params[0], states[0], pfx,
+                                              pval, run, rngs[0])
+                states[0] = st
+                valid_len = jnp.full((B,), W, jnp.int32)
+                ks, dts = [], []
+                res = None
+                for j in range(1, N):
+                    vpfx, vpval = prefixes[j]
+                    block = jnp.concatenate([vpfx, cand], axis=1)
+                    bvalid = jnp.concatenate(
+                        [vpval, jnp.ones(cand.shape, bool)],
+                        axis=1) & run[:, None]
+                    logits, st = lms[j].decode(params[j], states[j], block,
+                                               valid=bvalid,
+                                               logits_mode="all")
+                    states[j] = st
+                    vlogits = logits[:, P - 1:]
+                    if greedy:
+                        res = ver.verify_greedy(cand, vlogits, cprobs, run)
+                    else:
+                        res = ver.verify_sampling(
+                            cand, vlogits, cprobs, rngs[j],
+                            temperature=temperature, active=run,
+                            valid_len=valid_len)
+                    ks.append(res.num_accepted)
+                    dts.append(res.dtv)
+                    if j < N - 1:
+                        cand, cprobs, valid_len = ver.splice_candidates(
+                            cand, cprobs, res)
+                k_n = ks[-1]
+                ks_arr = jnp.stack(ks)                   # (N-1, B)
+                rbs = ver.consensus_rollbacks(ks_arr, W, run)
+                for j in range(N - 1):
+                    states[j] = lms[j].rollback(states[j], rbs[j])
+                states[N - 1] = lms[N - 1].rollback(
+                    states[N - 1], res.rollback.astype(jnp.int32))
+                seq, new_len, slab, cnum = _commit_dev(
+                    seq, sl32, run, cand, k_n, res.next_token, C)
+                accepts = ks_arr.astype(jnp.int32)
+                dtvs = jnp.stack(dts).astype(jnp.float32)
+            new_seq_len, new_active = _terminate_dev(
+                slab, run, sl32, new_len,
+                prompt_len.astype(jnp.int32), budget.astype(jnp.int32),
+                active, eos)
+            lengths, wps, fts, nbs = _state_summary(states)
+            summary = FusedSummary(slab, cnum, new_seq_len, new_active,
+                                   accepts, dtvs, lengths, wps, fts, nbs)
+            return tuple(states), seq, new_seq_len, new_active, summary
+
+        return f
+
+    def _build_fused_tree(self, lms, tree: TokenTree, greedy: bool,
+                          temperature: float, P: int, eos: int):
+        """One program = one whole TREE cycle (draft tree, per-level prune,
+        merged target verify, consensus resolve, commit, termination) —
+        mirrors ``ChainRouter._one_tree_cycle``."""
+        N = len(lms)
+        NT, D = tree.num_nodes, tree.depth_levels
+        C = D + 1
+        draft_body = _draft_tree_body(lms[0], tree, greedy, temperature)
+        spec_depth = jnp.asarray(np.concatenate(
+            [np.full(P, -1, np.int32), tree.depth]))
+        spec_attend = jnp.asarray(np.concatenate(
+            [np.zeros((P, NT), bool), tree.attend], axis=0))
+
+        def f(params, states, seq, seq_len, prompt_len, budget, active,
+              gmask, rngs):
+            states = list(states)
+            B = seq.shape[0]
+            run = active & gmask
+            sl32 = seq_len.astype(jnp.int32)
+            prefixes = [_gap_prefix_dev(st, seq, sl32, run, P)
+                        for st in states]
+            pfx, pval = prefixes[0]
+            cand, cprobs, st = draft_body(params[0], states[0], pfx, pval,
+                                          run, rngs[0])
+            states[0] = st
+            node_valid = jnp.broadcast_to(run[:, None], (B, NT))
+            acc_mats, ks, dts = [], [], []
+            res = None
+            for j in range(1, N):
+                final = j == N - 1
+                vpfx, vpval = prefixes[j]
+                block = jnp.concatenate([vpfx, cand], axis=1)
+                bvalid = jnp.concatenate(
+                    [vpval, jnp.ones(cand.shape, bool)],
+                    axis=1) & run[:, None]
+                logits, st = lms[j].decode(params[j], states[j], block,
+                                           valid=bvalid, logits_mode="all",
+                                           spec_depth=spec_depth,
+                                           spec_attend=spec_attend)
+                states[j] = st
+                vlogits = logits[:, P - 1:]
+                res = ver.verify_tree(tree, cand, vlogits, node_valid,
+                                      candidate_probs=cprobs, key=rngs[j],
+                                      greedy=greedy,
+                                      temperature=temperature, active=run,
+                                      final=final)
+                acc_mats.append(res.accept)
+                ks.append(res.num_accepted)
+                dts.append(res.dtv)
+                if not final:
+                    node_valid = node_valid & res.accept
+            k_n = res.num_accepted
+            path = res.path_nodes
+            keeps = ver.tree_consensus_keep(acc_mats, path, k_n, run)
+            for j in range(N):
+                keep = kvc.path_keep_matrix(path, keeps[j], NT, D)
+                states[j] = kvc.resolve_tree(states[j], NT, keep, keeps[j],
+                                             active=run)
+            path_tokens = jnp.take_along_axis(cand, path, axis=1)
+            seq, new_len, slab, cnum = _commit_dev(
+                seq, sl32, run, path_tokens, k_n, res.next_token, C)
+            new_seq_len, new_active = _terminate_dev(
+                slab, run, sl32, new_len,
+                prompt_len.astype(jnp.int32), budget.astype(jnp.int32),
+                active, eos)
+            lengths, wps, fts, nbs = _state_summary(states)
+            summary = FusedSummary(slab, cnum, new_seq_len, new_active,
+                                   jnp.stack(ks).astype(jnp.int32),
+                                   jnp.stack(dts).astype(jnp.float32),
+                                   lengths, wps, fts, nbs)
+            return tuple(states), seq, new_seq_len, new_active, summary
+
+        return f
+
+    def _fused_program(self, chain: Tuple[str, ...], window: int,
+                       tree: Optional[TokenTree], greedy: bool,
+                       temperature: float, prefix_width: int, eos: int):
+        tkey = tree.branching if tree is not None else None
+        key = ("fusedcycle", chain, window, tkey, greedy, temperature,
+               prefix_width, eos)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        lms = [self.pool.model(m) for m in chain]
+        if tree is not None:
+            body = self._build_fused_tree(lms, tree, greedy, temperature,
+                                          prefix_width, eos)
+        else:
+            body = self._build_fused_linear(lms, window, greedy,
+                                            temperature, prefix_width, eos)
+        # donate the model states + the seq/seq_len/active session buffers:
+        # the cycle replaces them wholesale, so XLA can update in place
+        prog = jax.jit(body, donate_argnums=(1, 2, 3, 6))
+        self._jit_cache[key] = prog
+        return prog
+
+    def fused_cycle(self, req: FusedCycleRequest):
+        """FusedCycleProcessor: run one whole speculative cycle for a
+        (chain, window | tree) group on device.  Checkout → run (states and
+        session buffers donated) → commit; exactly ONE host sync — the
+        ``FusedSummary`` device_get — per call.  Returns
+        ({seq, seq_len, active} new device buffers, numpy FusedSummary)."""
+        sids = [StateManager.key(m, req.request_id) for m in req.chain]
+        params = tuple(self.pool.params(m) for m in req.chain)
+        prog = self._fused_program(req.chain, req.window, req.tree,
+                                   req.greedy, req.temperature,
+                                   req.prefix_width, req.eos)
+        states = self.states.checkout(sids)
+        t0 = time.perf_counter()
+        try:
+            out = prog(params, tuple(states), req.seq, req.seq_len,
+                       req.prompt_len, req.budget, req.active, req.gmask,
+                       tuple(req.rngs))
+        except Exception:
+            # trace-time failure: nothing executed, buffers still valid —
+            # restore them.  A RUNTIME failure after dispatch (e.g. device
+            # OOM) has already consumed the donated buffers; committing
+            # deleted arrays would poison every later op with confusing
+            # "Array has been deleted" errors, so drop the registry
+            # entries instead and let the next access fail cleanly.
+            donated = any(
+                getattr(leaf, "is_deleted", lambda: False)()
+                for st in states for leaf in jax.tree.leaves(st))
+            if donated:
+                for sid in sids:
+                    self.states.release(sid)
+            else:
+                self.states.commit(sids, states)
+            raise
+        new_states, seq, seq_len, active, summary = out
+        self.states.commit(sids, list(new_states))
+        summary = jax.device_get(summary)     # THE one transfer per cycle
+        dt = time.perf_counter() - t0
+        self.profiler.count("host_sync")
+        self.profiler.record("fused_cycle", "+".join(req.chain), dt,
+                             tokens=int(summary.n_committed.sum()))
+        return {"seq": seq, "seq_len": seq_len, "active": active}, summary
 
     def resolve_tree(self, req: ResolveTreeRequest):
         """ResolveTreeProcessor: consensus settle of the model's tree block
@@ -555,4 +971,5 @@ class Executor:
                 state, jnp.asarray(req.path_nodes, jnp.int32),
                 jnp.asarray(req.keep_len, jnp.int32), active)
             jax.block_until_ready(state.write_ptr)
+        self.profiler.count("host_sync")
         self.states.update(sid, state)

@@ -50,6 +50,16 @@ class PerformanceProfiler:
                               must not share an EMA)
       ("verify", m, T)      — verify-pass wall time for block length T
       ("prefill", m)        — prefill time (chain-switch catch-up cost)
+
+    Diagnostics-only keys:
+      ("verify1", m)        — amortized per-token verify time (dt / (T+1)),
+                              the verify analogue of decode1
+      ("fused_cycle", c)    — whole fused-cycle wall time per chain group
+
+    The ``host_sync`` counter tallies host-synchronizing op dispatches
+    (device→host transfers that block on the device): one per per-op
+    processor call on the legacy path, ONE per cycle group on the fused
+    path — ``benchmarks/cycle_overhead.py`` asserts the gap.
     """
 
     def __init__(self, alpha: float = 0.3, keep_trace: bool = True,

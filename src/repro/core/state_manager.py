@@ -64,6 +64,23 @@ class StateManager:
         with self._lock:
             self._states[state_id] = state
 
+    def checkout(self, state_ids):
+        """Atomically REMOVE and return several states (fused-cycle entry):
+        the fused executor donates the state buffers to its jitted program,
+        and a donated buffer must have no surviving reference — popping the
+        registry entries guarantees no concurrent reader can touch the
+        invalidated arrays mid-cycle.  Pair with ``commit`` (the program's
+        outputs on success, the originals on a trace-time failure)."""
+        with self._lock:
+            return [self._states.pop(s) for s in state_ids]
+
+    def commit(self, state_ids, states):
+        """Write back states taken by ``checkout`` (replace-on-success —
+        the same atomicity contract as ``update``, for many states)."""
+        with self._lock:
+            for s, st in zip(state_ids, states):
+                self._states[s] = st
+
     def release(self, state_id: str):
         with self._lock:
             self._states.pop(state_id, None)

@@ -21,10 +21,12 @@ Two acceptance rules:
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..kernels.dtv import dtv_probs as _dtv
 
 
 class VerifyResult(NamedTuple):
@@ -35,11 +37,6 @@ class VerifyResult(NamedTuple):
     rollback: jnp.ndarray        # (B,) int32 — r = T - k
     dtv: jnp.ndarray             # (B,) float32 — mean TV distance p vs q over
                                  # the block (feeds SimScore, paper Eq. 5/6)
-
-
-def _dtv(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """0.5 * sum_v |p - q| over the last axis (paper Eq. 5)."""
-    return 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
 
 
 def verify_greedy(candidates: jnp.ndarray,
@@ -324,6 +321,54 @@ def _tree_walk_sampling(tree, cand, p_all, q, node_valid, key):
         cur = jnp.where(adv, chosen + 1, cur)
         done = done | ~adv
     return accept, k, jnp.stack(path, axis=1), p_res
+
+
+# ---------------------------------------------------------------------------
+# Consensus bookkeeping (paper §4.3 RollbackProcessor) — pure jittable
+# functions shared by the per-op cycle (host-orchestrated) and the fused
+# cycle program (device-resident), so both paths settle states identically.
+# ---------------------------------------------------------------------------
+def consensus_rollbacks(ks_arr: jnp.ndarray, window: int,
+                        active: jnp.ndarray) -> jnp.ndarray:
+    """Per-level rollback lengths for a linear chain.
+
+    ks_arr: (N-1, B) accepted counts per verify level (level j=2..N);
+    level j in [1..N-1] holds a candidate of length ``window + (j-1)`` and
+    rolls back to min(k_j, …, k_N) in shared position coordinates (the
+    paper's 'rollback length … based on consensus').  The target's own
+    rollback is ``VerifyResult.rollback``.  Returns (N-1, B) int32."""
+    n_lvls = ks_arr.shape[0]
+    out = []
+    for j in range(1, n_lvls + 1):
+        tc_j = window + (j - 1)
+        consensus = jnp.min(ks_arr[j - 1:], axis=0)
+        out.append(jnp.where(active, tc_j - jnp.minimum(consensus, tc_j), 0))
+    return jnp.stack(out).astype(jnp.int32)
+
+
+def tree_consensus_keep(accepts: Sequence[jnp.ndarray],
+                        path_nodes: jnp.ndarray, k_n: jnp.ndarray,
+                        active: jnp.ndarray) -> jnp.ndarray:
+    """Consensus keep-lengths for a tree cycle: chain position j keeps the
+    winning-path prefix that IT and every deeper level accepted (the draft
+    at j=0 keeps the min over all levels).
+
+    accepts: per verify level, (B, N) path-closed accept matrices;
+    path_nodes: (B, D) target winning path; k_n: (B,) target accepted
+    depth.  Returns (len(chain), B) int32 keep lengths, inactive rows 0."""
+    counts = []
+    for acc in accepts:
+        onpath = jnp.take_along_axis(acc.astype(jnp.int32), path_nodes,
+                                     axis=1)
+        counts.append(jnp.minimum(
+            jnp.sum(jnp.cumprod(onpath, axis=1), axis=1), k_n))
+    carr = jnp.stack(counts)                      # (N-1, B)
+    outs = []
+    for j in range(len(accepts) + 1):             # chain positions 0..N-1
+        c = jnp.min(carr, axis=0) if j == 0 else jnp.min(carr[j - 1:],
+                                                         axis=0)
+        outs.append(jnp.where(active, c, 0))
+    return jnp.stack(outs).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,16 @@ BLK_V = 2048       # vocab lanes per tile (128-aligned)
 NEG = -1e30
 
 
+def dtv_probs(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """0.5 · Σ_v |p − q| over the last axis (paper Eq. 5), probability
+    domain.  The single DTV definition shared by every on-device consumer:
+    the per-op verify math AND the fused cycle program import it from here,
+    so the similarity signal is identical whichever path produced it.  The
+    Pallas kernels below are the logits-domain variant for probe-time
+    comparisons over vocabularies too large to materialize as probs."""
+    return 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # Kernel 1: online softmax statistics
 # ---------------------------------------------------------------------------

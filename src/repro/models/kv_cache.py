@@ -221,6 +221,20 @@ def resolve_tree(state, num_nodes: int, keep: jnp.ndarray,
     return physical_reclaim(new)
 
 
+def path_keep_matrix(path_nodes: jnp.ndarray, keep_len: jnp.ndarray,
+                     num_nodes: int, depth_levels: int) -> jnp.ndarray:
+    """(B, D) winning-path node ids + (B,) consensus depth -> (B, N) bool
+    keep matrix for ``resolve_tree`` (True for the first ``keep_len`` nodes
+    along the path).  Pure index arithmetic, used in-program by both the
+    per-op ResolveTreeProcessor and the fused cycle executor."""
+    depth_ok = (jnp.arange(depth_levels, dtype=jnp.int32)[None, :]
+                < keep_len[:, None])                            # (B, D)
+    onehot = ((path_nodes[..., None]
+               == jnp.arange(num_nodes, dtype=jnp.int32)[None, None, :])
+              & depth_ok[..., None])                            # (B, D, N)
+    return jnp.any(onehot, axis=1)                              # (B, N)
+
+
 def free_rows(state, rows, layer_axes=None):
     """Retire a subset of batch rows so their slots can host new requests
     (slot-level continuous batching).

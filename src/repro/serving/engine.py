@@ -20,6 +20,13 @@ one masked sub-cycle per distinct (chain, window, tree) group.  Pass
 ``router_kwargs=dict(slot_routing=False)`` for the legacy global-chain
 baseline (``benchmarks/routing_ab.py`` is the A/B).
 
+Speculation cycles are DEVICE-RESIDENT by default (``fused=True``): each
+sub-cycle group is one jitted program and one host transfer per cycle,
+with periodic unfused profiling cycles (``router_kwargs["profile_every"]``,
+default 16) refreshing the scheduler's per-op timings; ``fused=False``
+restores the per-op host-orchestrated loop
+(``benchmarks/cycle_overhead.py`` is the A/B).
+
 Legacy model (``continuous=False``): stop-the-world batch formation —
 requests queue until ``batch_size`` are available (or ``batch_wait_s``
 elapses), then the batch generates to completion.  Kept as the reproducible
@@ -75,7 +82,8 @@ class ServingEngine:
                  slo_latency_s: float = 30.0,
                  router_kwargs: Optional[dict] = None,
                  continuous: bool = True,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None,
+                 fused: Optional[bool] = None):
         self.pool = pool
         self.target = target
         self.batch_size = batch_size       # slot count in continuous mode
@@ -85,6 +93,8 @@ class ServingEngine:
         self.router_kwargs = dict(router_kwargs or {})
         if paged is not None:              # engine-level A/B convenience
             self.router_kwargs.setdefault("paged", paged)
+        if fused is not None:              # device-resident cycles A/B
+            self.router_kwargs.setdefault("fused", fused)
         self.router_kwargs.setdefault(
             "profiler", PerformanceProfiler(trace_cap=_SERVING_TRACE_CAP))
         # one router per engine: jit caches and scheduler state persist

@@ -78,6 +78,27 @@ def test_eos_early_stop(pool):
         np.testing.assert_array_equal(out.generated[b], ref.generated[b])
 
 
+@pytest.mark.parametrize("mode", ["linear", "tree"])
+def test_fused_equivalence(pool, reference, mode):
+    """Device-resident fused cycles: greedy output bit-exact vs the
+    per-op path (fused=False) and vs target-only, for linear and tree
+    groups — with the profiling-cycle interleave active."""
+    prompt, plens, ref = reference
+    kw = dict(greedy=True, adaptive=False, fixed_chain=("m68", "m7b"))
+    if mode == "tree":
+        kw["fixed_tree"] = "2x1x1"
+    else:
+        kw["fixed_window"] = 4
+    unf = ChainRouter(pool, "m7b", fused=False, **kw).generate(
+        prompt, plens, 14, request_id=f"u{mode}")
+    fus = ChainRouter(pool, "m7b", fused=True, profile_every=5,
+                      **kw).generate(prompt, plens, 14,
+                                     request_id=f"f{mode}")
+    for b in range(3):
+        np.testing.assert_array_equal(fus.generated[b], unf.generated[b])
+        np.testing.assert_array_equal(fus.generated[b], ref.generated[b])
+
+
 def test_speculation_actually_accepts():
     """A draft with IDENTICAL weights to the target must accept everything
     under greedy (sanity that acceptance accounting isn't trivially zero).
