@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ChainRouter, ModelPool
-from repro.data.workload import Request
+from repro.data import Request, streams_bit_exact
 from repro.models import ModelConfig
 from repro.models.model import LanguageModel
 from repro.serving import ServingEngine
@@ -145,9 +145,7 @@ def run_arm(pool: ModelPool, slot_routing: bool, n_reqs: int,
                           for d in DECOYS))
     warm_decoy = decoy_ops()
     m = eng.run(reqs := make_requests(n_reqs))
-    exact = all(np.array_equal(q.output_tokens, o)
-                for q, o in zip(reqs, ref))
-    return dict(metrics=m, bit_exact=exact,
+    return dict(metrics=m, bit_exact=streams_bit_exact(reqs, ref),
                 decoy_prefills=int(decoy_ops() - warm_decoy))
 
 

@@ -13,14 +13,38 @@ baselines for the EAF speedup.
                             # cycle, whole pool prefilled at admission
         [--no-fused]        # legacy host-orchestrated per-op cycles (A/B)
         [--profile-every N] # unfused profiling-cycle cadence (default 16)
+        [--workload burst]  # MMPP bursty arrivals instead of Poisson
+        [--workload trace --trace-file t.jsonl]  # JSONL trace replay
+        [--ttft-slo 2.0] [--tpot-slo 0.5]  # per-request SLOs: activates
+                            # the goodput-aware chain search + EDF
+                            # admission (per-dataset defaults via the
+                            # workload's with_slo are in data/workload.py)
+        [--shed]            # drop queued requests whose TTFT deadline is
+                            # already unmeetable (goodput over latency)
 """
 import argparse
+import math
 
 import numpy as np
 
-from repro.data import make_workload
+from repro.data import load_trace, make_bursty_workload, make_workload
 from repro.serving import ServingEngine
 from repro.train.pool import build_trained_pool
+
+
+def build_requests(corpus, args):
+    slo = dict(ttft_slo=args.ttft_slo, tpot_slo=args.tpot_slo)
+    if args.workload == "trace":
+        return load_trace(args.trace_file, **slo)
+    if args.workload == "burst":
+        # ON bursts at 4x the nominal rate, 25% duty cycle -> same
+        # offered load as the Poisson arm but arriving in clumps
+        return make_bursty_workload(
+            corpus, args.dataset, rate_on_rps=4.0 * args.rate,
+            duration_s=args.duration, mean_on_s=2.0, mean_off_s=6.0,
+            seed=7, **slo)
+    return make_workload(corpus, args.dataset, args.rate, args.duration,
+                         seed=7, **slo)
 
 
 def run(pool, corpus, args, label, router_kwargs):
@@ -28,18 +52,22 @@ def run(pool, corpus, args, label, router_kwargs):
                          slot_routing=not args.no_slot_routing,
                          fused=not args.no_fused,
                          profile_every=args.profile_every)
-    reqs = make_workload(corpus, args.dataset, args.rate, args.duration,
-                         seed=7)
+    reqs = build_requests(corpus, args)
     eng = ServingEngine(pool, "demo-7b", batch_size=args.batch,
                         slo_latency_s=args.slo,
+                        shed_policy="ttft" if args.shed else "none",
                         router_kwargs=router_kwargs,
                         continuous=not args.no_continuous)
     m = eng.run(reqs)
-    print(f"[{label:<22}] goodput {m.goodput_tps:7.1f} tok/s | "
-          f"TTFT {m.avg_ttft_s:6.2f}s (p95 {m.p95_ttft_s:5.2f}s, "
-          f"queue {m.avg_queue_s:5.2f}s) | TPOT {m.avg_tpot_s*1e3:7.1f}ms | "
-          f"p95 lat {m.p95_latency_s:6.2f}s | SLO {m.slo_attainment:5.1%} | "
-          f"acc-len {m.avg_acceptance_len:4.2f}")
+    line = (f"[{label:<22}] goodput {m.goodput_tps:7.1f} tok/s | "
+            f"TTFT {m.avg_ttft_s:6.2f}s (p95 {m.p95_ttft_s:5.2f}s, "
+            f"queue {m.avg_queue_s:5.2f}s) | TPOT {m.avg_tpot_s*1e3:7.1f}ms | "
+            f"p95 lat {m.p95_latency_s:6.2f}s | SLO {m.slo_attainment:5.1%} | "
+            f"acc-len {m.avg_acceptance_len:4.2f}")
+    if not math.isnan(m.request_slo_attainment):
+        line += (f" | SLO-req {m.request_slo_attainment:5.1%} "
+                 f"(shed {m.num_shed})")
+    print(line)
     return m
 
 
@@ -73,7 +101,29 @@ def main():
                     help="run an unfused profiling cycle every N cycles "
                          "to refresh the scheduler's per-op timings "
                          "(0 = never)")
+    ap.add_argument("--workload", default="poisson",
+                    choices=["poisson", "burst", "trace"],
+                    help="arrival process: Poisson open loop (default), "
+                         "MMPP bursty (ON/OFF clumps at the same offered "
+                         "load), or JSONL trace replay")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="JSONL trace for --workload trace (see "
+                         "data/workload.py save_trace/load_trace)")
+    ap.add_argument("--ttft-slo", type=float, default=None, metavar="S",
+                    help="per-request time-to-first-token SLO in seconds; "
+                         "setting any SLO turns on the goodput-aware "
+                         "chain search and EDF admission")
+    ap.add_argument("--tpot-slo", type=float, default=None, metavar="S",
+                    help="per-request time-per-output-token SLO in "
+                         "seconds")
+    ap.add_argument("--shed", action="store_true",
+                    help="shed queued requests whose TTFT deadline "
+                         "cannot be met anymore (needs --ttft-slo)")
     args = ap.parse_args()
+    if args.workload == "trace" and not args.trace_file:
+        ap.error("--workload trace requires --trace-file")
+    if args.shed and args.ttft_slo is None:
+        ap.error("--shed needs --ttft-slo (deadline to shed against)")
 
     pool, corpus = build_trained_pool(steps=args.steps)
 

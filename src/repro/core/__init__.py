@@ -4,8 +4,8 @@ from .executor import (DraftRequest, DraftTreeRequest, Executor,
                        VerifyRequest, VerifyTreeRequest)
 from .model_pool import DeviceManager, ModelPool
 from .profiler import EMA, PerformanceProfiler
-from .scheduler import (ChainChoice, ModelChainScheduler, expected_accepted,
-                        expected_tree_accepted)
+from .scheduler import (ChainChoice, LoadSignal, ModelChainScheduler,
+                        expected_accepted, expected_tree_accepted)
 from .similarity import (SimilarityStore, SlotSimilarity,
                          acceptance_from_sim, pairwise_dtv,
                          pairwise_dtv_rows)

@@ -913,12 +913,17 @@ class RouterSession:
               max_new_tokens: int,
               chain: Optional[Sequence[str]] = None,
               window: Optional[int] = None,
-              tree=None) -> float:
+              tree=None,
+              ttft_slo_s: Optional[float] = None,
+              tpot_slo_s: Optional[float] = None) -> float:
         """Admit a request into a free slot (QUEUED -> PREFILL): assign
         the slot a chain, write its prompt into the slot row, and
         catch-up-prefill the CHAIN members only (the whole pool when
         ``router.slot_routing=False``).  An explicit ``chain``/``window``/
         ``tree`` pins the slot's routing (bypassing the scheduler).
+        ``ttft_slo_s``/``tpot_slo_s`` attach the request's SLOs to the
+        slot's chain search (the goodput objective's per-slot inputs;
+        cleared at retirement).
         Returns the measured admission wall time in seconds.
 
         Raises ValueError — before any slot state is touched — when the
@@ -960,6 +965,9 @@ class RouterSession:
         self.budget[slot] = int(max_new_tokens)
         self.occupied[slot] = True
         self.active[slot] = True
+        # SLOs must be attached BEFORE the chain choice: the goodput
+        # objective's TPOT-feasibility term reads them
+        r.scheduler.set_slot_slo(self._skey(slot), ttft_slo_s, tpot_slo_s)
         if choice is None:
             choice = self._choose(slot)
         self._slot_choice[slot] = choice
@@ -1278,6 +1286,9 @@ class RouterSession:
             self.chain_history.append((choice.chain, choice.window))
             ginfo.append((choice.chain, choice.window, int(gmask.sum())))
         wall = _time.perf_counter() - t0
+        # cycle-latency EMA: the load signal's "seconds a queued request
+        # waits per cycle boundary" (admission runs between cycles)
+        r.profiler.record("cycle_wall", "session", wall)
         acc_mean = float(np.mean(n_acc[pre_active]))
         self.steps += 1
         # EOS scan covers only this cycle's commits (earlier tokens were

@@ -56,6 +56,13 @@ class PerformanceProfiler:
                               the verify analogue of decode1
       ("fused_cycle", c)    — whole fused-cycle wall time per chain group
 
+    Load-signal key (SLO-aware scheduling + admission shed policy):
+      ("cycle_wall", "session") — wall time of one whole RouterSession
+                              cycle across all sub-cycle groups (query it
+                              via ``cycle_time()``); deliberately NOT in
+                              the scheduler's Eq. 7 inputs snapshot — the
+                              LoadSignal carries it instead
+
     The ``host_sync`` counter tallies host-synchronizing op dispatches
     (device→host transfers that block on the device): one per per-op
     processor call on the legacy path, ONE per cycle group on the fused
@@ -121,6 +128,14 @@ class PerformanceProfiler:
 
     def prefill_time(self, model: str, default: float) -> float:
         return self.emas[("prefill", model)].get(default)
+
+    def cycle_time(self, default: float = 0.0) -> float:
+        """EMA wall time of one whole speculative cycle (all sub-cycle
+        groups), recorded by ``RouterSession.run_cycle`` under
+        ``("cycle_wall", "session")`` — the load signal's estimate of how
+        long a queued request waits per cycle boundary (SLO-aware
+        scheduling and the admission shed policy both read it)."""
+        return self.emas[("cycle_wall", "session")].get(default)
 
     def summary(self) -> Dict[str, float]:
         out = {}

@@ -24,6 +24,33 @@ class ChainChoice:
     predicted_t_eff: float          # seconds per committed target token
     table: Dict = dataclasses.field(default_factory=dict, compare=False)
     tree: Optional[TokenTree] = None  # None = linear window draft
+    # goodput objective actually minimized (== predicted_t_eff on the
+    # latency-only / no-SLO degenerate path)
+    score: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSignal:
+    """Engine-side load snapshot feeding the goodput-aware chain search:
+    run-queue depth (arrived requests with no free slot), slot occupancy,
+    and the profiler's cycle-latency EMA.  ``pressure`` collapses it to
+    [0, 1]: zero whenever nothing queues (full-but-keeping-up engines
+    should still speculate deep — all work serves admitted requests),
+    rising toward 1 as the queue approaches/exceeds the slot pool while
+    slots are busy (every second of cycle wall then delays a queued
+    request's first token)."""
+    queue_depth: int = 0        # arrived, not yet admitted
+    occupancy: float = 0.0      # busy slots / total slots
+    cycle_ema_s: float = 0.0    # PerformanceProfiler.cycle_time()
+    num_slots: int = 1
+
+    @property
+    def pressure(self) -> float:
+        if self.num_slots <= 0:
+            return 0.0
+        q = min(self.queue_depth / float(self.num_slots), 1.0)
+        occ = min(max(self.occupancy, 0.0), 1.0)
+        return q * occ
 
 
 def expected_accepted(alpha: float, w: float) -> float:
@@ -77,7 +104,10 @@ class ModelChainScheduler:
                  default_decode_s: float = 0.05,
                  reuse_rtol: float = 0.02,
                  explore_sim: float = 0.8,
-                 capability_exponent: float = 0.5):
+                 capability_exponent: float = 0.5,
+                 slo_aware: bool = False,
+                 load_beta: float = 8.0,
+                 slo_miss_penalty: float = 4.0):
         assert target in model_names
         self.models = list(model_names)
         self.target = target
@@ -109,6 +139,24 @@ class ModelChainScheduler:
         # default 0.5 is conservative for same-architecture pools; pools
         # whose wall time scales ~linearly with parameters can set 1.0.
         self.capability_exponent = capability_exponent
+        # --- goodput-aware objective (SLO-aware serving) ---------------
+        # With ``slo_aware`` on AND a load signal set, the argmin target
+        # becomes predicted SLO attainment instead of raw T_eff:
+        #   score = T_eff + pressure·load_beta·cycle_cost
+        #           [+ slo_miss_penalty·max(0, T_eff - tpot_slo)]
+        # Cycle cost (Eq. 7's numerator) is what queued requests wait on
+        # — admission happens between cycles — so under pressure the
+        # search shrinks the speculation window / flattens trees / drops
+        # to target-only, and with pressure 0 the objective is EXACTLY
+        # T_eff (idle engines speculate as deep as today; the degenerate
+        # path is pinned bit-identical by tests/test_slo_scheduling.py).
+        self.slo_aware = slo_aware
+        self.load_beta = load_beta
+        self.slo_miss_penalty = slo_miss_penalty
+        self._load: Optional[LoadSignal] = None
+        # per-slot (ttft_slo_s, tpot_slo_s); None entries = no SLO
+        self._slot_slo: Dict[str, Tuple[Optional[float],
+                                        Optional[float]]] = {}
         self.eval_count = 0           # full sweeps actually executed
         self.reuse_count = 0          # calls served from the memo
         self._last_inputs: Optional[Dict] = None
@@ -146,22 +194,49 @@ class ModelChainScheduler:
         self.slot_sims.update(slot, a, b, dtv)
 
     def release_slot(self, slot: str):
-        """Drop a retired slot's view (EMAs + memo) — the next occupant
-        of the physical slot must start from the shared prior."""
+        """Drop a retired slot's view (EMAs + memo + SLO) — the next
+        occupant of the physical slot must start from the shared prior."""
         self.slot_sims.release(slot)
         self._slot_choice.pop(slot, None)
         self._slot_inputs.pop(slot, None)
+        self._slot_slo.pop(slot, None)
+
+    # ---- load / SLO plumbing (goodput objective inputs) -----------------
+    def set_load(self, load: Optional[LoadSignal]):
+        """Engine-published load snapshot.  Part of the Eq. 7 inputs
+        snapshot when the goodput objective is active, so a load step
+        change invalidates every memoized choice (pinned by
+        ``tests/test_slo_scheduling.py``)."""
+        self._load = load
+
+    def set_slot_slo(self, slot: str, ttft_slo_s: Optional[float] = None,
+                     tpot_slo_s: Optional[float] = None):
+        """Attach the admitted request's SLOs to its slot's chain search
+        (cleared by ``release_slot``)."""
+        if ttft_slo_s is None and tpot_slo_s is None:
+            self._slot_slo.pop(slot, None)
+        else:
+            self._slot_slo[slot] = (ttft_slo_s, tpot_slo_s)
+
+    def _goodput_active(self) -> bool:
+        return self.slo_aware and self._load is not None
 
     # ---- Eq. 7 predictor ------------------------------------------------
-    def predict_t_eff(self, chain: Sequence[str], window: int,
+    def predict_costs(self, chain: Sequence[str], window: int,
                       alphas: Optional[Sequence[float]] = None,
                       tree: Optional[TokenTree] = None,
-                      slot: Optional[str] = None) -> float:
+                      slot: Optional[str] = None) -> Tuple[float, float]:
+        """Eq. 7's two ingredients for one (chain, window | tree) option:
+        ``(cycle_cost_s, committed)`` — predicted wall seconds per
+        speculative cycle and expected target tokens committed by it.
+        ``predict_t_eff`` is their ratio; the goodput objective also
+        reads the raw cycle cost (queued requests wait on cycle
+        boundaries, so cycle wall time IS their TTFT currency)."""
         prof = self.profiler
         T = {m: prof.decode_time(m, self._default_time(m))
              for m in chain}
         if len(chain) == 1:
-            return T[chain[0]]
+            return T[chain[0]], 1.0
         if alphas is None:
             alphas = [self.pair_alpha(slot, chain[i], chain[i + 1])
                       for i in range(len(chain) - 1)]
@@ -182,7 +257,7 @@ class ModelChainScheduler:
                 verify_default = T[chain[j]] * (1.0 + self.nu * N)
                 cost += prof.verify_time(chain[j], N + 1, verify_default)
             committed = expected_tree_accepted(a_bar, tree.branching) + 1.0
-            return cost / max(committed, 1e-9)
+            return cost, committed
 
         lam = float(window)          # candidate length entering level j+1
         cost = window * T[chain[0]]  # W sequential draft steps
@@ -197,7 +272,32 @@ class ModelChainScheduler:
                 lam = acc + 1.0      # accepted prefix + correction joins
             else:
                 committed = acc + 1.0  # target: accepted + bonus
+        return cost, committed
+
+    def predict_t_eff(self, chain: Sequence[str], window: int,
+                      alphas: Optional[Sequence[float]] = None,
+                      tree: Optional[TokenTree] = None,
+                      slot: Optional[str] = None) -> float:
+        cost, committed = self.predict_costs(chain, window, alphas=alphas,
+                                             tree=tree, slot=slot)
         return cost / max(committed, 1e-9)
+
+    def score_choice(self, t_eff: float, cycle_cost_s: float,
+                     slot: Optional[str] = None) -> float:
+        """Goodput objective (SLO-aware serving): per-token latency plus a
+        pressure-weighted cycle-wall penalty, plus a soft-infeasibility
+        penalty for options predicted to blow the slot's TPOT SLO.  With
+        the goodput objective inactive (no SLOs configured, or no load
+        signal) this IS ``t_eff`` — today's latency-only argmin."""
+        if not self._goodput_active():
+            return t_eff
+        p = self._load.pressure
+        score = t_eff + p * self.load_beta * cycle_cost_s
+        if slot is not None:
+            tpot_slo = self._slot_slo.get(slot, (None, None))[1]
+            if tpot_slo is not None and t_eff > tpot_slo:
+                score += self.slo_miss_penalty * (t_eff - tpot_slo)
+        return score
 
     def _default_time(self, m: str) -> float:
         # cold start: scale a nominal decode time by relative capability
@@ -218,6 +318,15 @@ class ModelChainScheduler:
         if slot is not None:
             for k, v in self.slot_sims.table(slot).items():
                 snap[("slotsim",) + k] = v
+        if self._goodput_active():
+            # the goodput objective reads the load pressure and the
+            # slot's TPOT SLO — both must sit inside the drift gate, or a
+            # load step change would keep serving the stale memo
+            snap[("load", "pressure")] = self._load.pressure
+            if slot is not None:
+                ttft, tpot = self._slot_slo.get(slot, (None, None))
+                snap[("slo", "ttft")] = -1.0 if ttft is None else ttft
+                snap[("slo", "tpot")] = -1.0 if tpot is None else tpot
         return snap
 
     def _inputs_drifted(self, snap: Dict, last: Optional[Dict]) -> bool:
@@ -260,18 +369,21 @@ class ModelChainScheduler:
                     and all(self.tree_capable.get(m, False) for m in chain)):
                 options += [(tr.depth_levels, tr) for tr in self.tree_shapes]
             for w, tr in options:
-                t = self.predict_t_eff(chain, w, tree=tr, slot=slot)
+                cost, committed = self.predict_costs(chain, w, tree=tr,
+                                                     slot=slot)
+                t = cost / max(committed, 1e-9)
                 if prev is not None and chain != prev:
                     # amortized catch-up prefill for newly joining models
                     joiners = set(chain) - set(prev)
                     pen = sum(self.profiler.prefill_time(m, 10 * self._default_time(m))
                               for m in joiners)
                     t = t + pen / self.switch_penalty_steps
-                table[(chain, w, tr)] = t
-                if best is None or t < best.predicted_t_eff:
-                    best = ChainChoice(chain, w, t, tree=tr)
+                s = self.score_choice(t, cost, slot=slot)
+                table[(chain, w, tr)] = s
+                if best is None or s < best.score:
+                    best = ChainChoice(chain, w, t, tree=tr, score=s)
         best = ChainChoice(best.chain, best.window, best.predicted_t_eff,
-                           table, tree=best.tree)
+                           table, tree=best.tree, score=best.score)
         if slot is not None:
             self._slot_choice[slot] = best
             self._slot_inputs[slot] = snap

@@ -1,2 +1,4 @@
 from .synthetic import CorpusConfig, SyntheticCorpus
-from .workload import DATASET_PROFILES, Request, make_workload
+from .workload import (DATASET_PROFILES, DATASET_SLOS, Request, load_trace,
+                       make_bursty_workload, make_workload, resolve_slo,
+                       save_trace, streams_bit_exact)

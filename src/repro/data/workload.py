@@ -1,14 +1,35 @@
-"""Request workload generation (paper §5 Workloads): Poisson arrivals with
-input/output length profiles modeled on the four evaluation datasets.
+"""Request workload generation (paper §5 Workloads): open-loop arrivals
+with input/output length profiles modeled on the four evaluation datasets.
+
+Three arrival processes:
+
+  * ``make_workload`` — homogeneous Poisson (the paper's §5 setup);
+  * ``make_bursty_workload`` — a two-state Markov-modulated Poisson
+    process (MMPP): exponentially-distributed ON/OFF dwell times with a
+    different arrival rate in each state.  This is the bursty regime that
+    motivates SLO-aware scheduling (SpecServe/AdaSpec, arXiv:2503.05096):
+    an engine sized for the average rate is transiently oversubscribed
+    during every ON burst;
+  * ``load_trace`` / ``save_trace`` — JSONL arrival-trace replay, so a
+    recorded (or hand-built) arrival pattern is exactly reproducible
+    across A/B arms and CI runs.
 
 Length profiles are lognormal approximations of the public datasets'
 prompt/answer statistics (GSM8K: short math prompts / medium answers;
 HumanEval: medium code prompts / medium-long answers; MTBench: long
-multi-turn contexts / long answers; MGSM: GSM8K-like, multilingual)."""
+multi-turn contexts / long answers; MGSM: GSM8K-like, multilingual).
+
+Every request can carry a TTFT/TPOT SLO (``ttft_slo_s``/``tpot_slo_s``):
+per-dataset defaults (``DATASET_SLOS``) apply when a generator is asked
+for SLOs, and explicit values override them.  Requests without SLOs are
+scheduled exactly as before — the SLO-aware serving path degenerates to
+the latency-only scheduler (pinned by ``tests/test_slo_scheduling.py``).
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+import json
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,6 +41,16 @@ DATASET_PROFILES = {
     "mgsm":      (np.log(65),  0.4, np.log(130), 0.5),
 }
 
+# default (ttft_slo_s, tpot_slo_s) per dataset: interactive budgets scaled
+# to the CPU-host demo (short math turns are latency-sensitive, long
+# multi-turn chat tolerates a slower first token)
+DATASET_SLOS = {
+    "gsm8k":     (2.0, 0.5),
+    "humaneval": (4.0, 0.6),
+    "mtbench":   (6.0, 0.8),
+    "mgsm":      (2.0, 0.5),
+}
+
 
 @dataclasses.dataclass
 class Request:
@@ -28,13 +59,17 @@ class Request:
     prompt: np.ndarray          # (Lp,) int64
     max_new_tokens: int
     dataset: str
+    # service-level objectives (None = no SLO on that axis):
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
     # filled by the engine:
     start_s: float = -1.0        # slot admission (continuous) / batch start
     first_token_s: float = -1.0
     finish_s: float = -1.0
     generated: int = 0
-    output_tokens: np.ndarray = None   # committed stream (A/B bit-equality
-                                       # checks against target-only decode)
+    shed: bool = False           # dropped by the admission shed policy
+    output_tokens: Optional[np.ndarray] = None   # committed stream (A/B
+                                 # bit-equality vs target-only decode)
 
     @property
     def ttft(self):
@@ -59,25 +94,210 @@ class Request:
             return float("nan")
         return (self.finish_s - self.first_token_s) / (self.generated - 1)
 
+    @property
+    def ttft_deadline_s(self) -> float:
+        """Absolute wall deadline for the first token (inf = no TTFT SLO).
+        Earliest-deadline-first admission orders the run queue by this."""
+        if self.ttft_slo_s is None:
+            return float("inf")
+        return self.arrival_s + self.ttft_slo_s
+
+    @property
+    def slo_met(self) -> bool:
+        """Did the request meet every SLO it carries?  Shed or unfinished
+        requests are misses; a finished request with no SLO counts as met
+        (goodput over a no-SLO population equals plain throughput)."""
+        if self.shed or self.finish_s < 0:
+            return False
+        if self.ttft_slo_s is not None and self.ttft > self.ttft_slo_s:
+            return False
+        if self.tpot_slo_s is not None:
+            t = self.tpot
+            if np.isfinite(t) and t > self.tpot_slo_s:
+                return False
+        return True
+
+
+def resolve_slo(dataset: str, ttft_slo: Optional[float] = None,
+                tpot_slo: Optional[float] = None,
+                with_slo: bool = False
+                ) -> Tuple[Optional[float], Optional[float]]:
+    """SLO resolution used by every generator: explicit values win; with
+    ``with_slo`` the dataset defaults fill whichever axis is unset; with
+    neither, the request carries no SLO at all."""
+    if not with_slo and ttft_slo is None and tpot_slo is None:
+        return None, None
+    d_ttft, d_tpot = DATASET_SLOS.get(dataset, (None, None))
+    return (ttft_slo if ttft_slo is not None else (d_ttft if with_slo
+                                                   else None),
+            tpot_slo if tpot_slo is not None else (d_tpot if with_slo
+                                                   else None))
+
+
+def _sample_request(corpus, dataset: str, rng, i: int, t: float,
+                    scale: float, max_prompt: int, max_out: int,
+                    ttft_slo: Optional[float],
+                    tpot_slo: Optional[float]) -> Request:
+    pmu, psig, omu, osig = DATASET_PROFILES[dataset]
+    Lp = int(np.clip(rng.lognormal(pmu, psig) * scale, 4, max_prompt))
+    Lo = int(np.clip(rng.lognormal(omu, osig) * scale, 4, max_out))
+    return Request(request_id=f"{dataset}-{i}", arrival_s=t,
+                   prompt=corpus.sample(rng, Lp), max_new_tokens=Lo,
+                   dataset=dataset, ttft_slo_s=ttft_slo,
+                   tpot_slo_s=tpot_slo)
+
 
 def make_workload(corpus, dataset: str, rate_rps: float, duration_s: float,
                   seed: int = 0, scale: float = 0.25,
-                  max_prompt: int = 96, max_out: int = 48) -> List[Request]:
+                  max_prompt: int = 96, max_out: int = 48,
+                  with_slo: bool = False,
+                  ttft_slo: Optional[float] = None,
+                  tpot_slo: Optional[float] = None) -> List[Request]:
     """Poisson arrivals; lengths drawn from the dataset profile, scaled down
     by ``scale`` so the CPU-host demo stays tractable while preserving the
     relative dataset shapes."""
-    pmu, psig, omu, osig = DATASET_PROFILES[dataset]
+    ttft_slo, tpot_slo = resolve_slo(dataset, ttft_slo, tpot_slo, with_slo)
     rng = np.random.default_rng(seed)
     t = 0.0
     out: List[Request] = []
     i = 0
     while t < duration_s:
         t += rng.exponential(1.0 / rate_rps)
-        Lp = int(np.clip(rng.lognormal(pmu, psig) * scale, 4, max_prompt))
-        Lo = int(np.clip(rng.lognormal(omu, osig) * scale, 4, max_out))
-        out.append(Request(
-            request_id=f"{dataset}-{i}", arrival_s=t,
-            prompt=corpus.sample(rng, Lp), max_new_tokens=Lo,
-            dataset=dataset))
+        if t >= duration_s:
+            break
+        out.append(_sample_request(corpus, dataset, rng, i, t, scale,
+                                   max_prompt, max_out, ttft_slo, tpot_slo))
         i += 1
     return out
+
+
+def make_bursty_workload(corpus, dataset: str, rate_on_rps: float,
+                         duration_s: float, rate_off_rps: float = 0.0,
+                         mean_on_s: float = 2.0, mean_off_s: float = 6.0,
+                         seed: int = 0, scale: float = 0.25,
+                         max_prompt: int = 96, max_out: int = 48,
+                         start_on: bool = True,
+                         with_slo: bool = False,
+                         ttft_slo: Optional[float] = None,
+                         tpot_slo: Optional[float] = None,
+                         return_states: bool = False):
+    """Two-state MMPP arrivals: exponential ON/OFF dwell times
+    (``mean_on_s``/``mean_off_s``) with Poisson arrivals at
+    ``rate_on_rps`` during ON and ``rate_off_rps`` during OFF.  The
+    long-run arrival-rate duty cycle is
+
+        rate_on·mean_on / (rate_on·mean_on + rate_off·mean_off)
+
+    so ``rate_off_rps=0`` concentrates ALL arrivals inside the bursts —
+    the oversubscription regime SLO-aware scheduling targets.
+
+    ``return_states=True`` additionally returns the simulated state
+    intervals ``[(start_s, end_s, is_on), ...]`` (conformance tests pin
+    the duty cycle and the arrivals-inside-bursts invariant against
+    them)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    on = bool(start_on)
+    state_start = 0.0
+    state_end = rng.exponential(mean_on_s if on else mean_off_s)
+    intervals: List[Tuple[float, float, bool]] = []
+    ttft_slo, tpot_slo = resolve_slo(dataset, ttft_slo, tpot_slo, with_slo)
+    out: List[Request] = []
+    i = 0
+    while t < duration_s:
+        rate = rate_on_rps if on else rate_off_rps
+        dt = rng.exponential(1.0 / rate) if rate > 0 else float("inf")
+        if t + dt <= state_end:
+            t += dt
+            if t >= duration_s:
+                break
+            out.append(_sample_request(corpus, dataset, rng, i, t, scale,
+                                       max_prompt, max_out, ttft_slo,
+                                       tpot_slo))
+            i += 1
+        else:
+            # no arrival before the switch: jump to the boundary (the
+            # exponential is memoryless, so discarding the partial draw
+            # keeps the process exact) and flip states
+            intervals.append((state_start, min(state_end, duration_s), on))
+            t = state_end
+            on = not on
+            state_start = t
+            state_end = t + rng.exponential(mean_on_s if on else mean_off_s)
+    if state_start < duration_s:
+        intervals.append((state_start, duration_s, on))
+    if return_states:
+        return out, intervals
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JSONL arrival-trace replay
+# ---------------------------------------------------------------------------
+def save_trace(requests: Sequence[Request], path: str) -> None:
+    """Write an arrival trace (one JSON object per line) capturing the
+    open-loop inputs of each request — arrival time, prompt tokens,
+    generation budget, dataset tag, SLOs.  Engine-filled timing fields
+    are deliberately NOT saved: a trace replays arrivals, not outcomes."""
+    with open(path, "w") as f:
+        for r in requests:
+            f.write(json.dumps({
+                "request_id": r.request_id,
+                "arrival_s": float(r.arrival_s),
+                "prompt": np.asarray(r.prompt).astype(int).tolist(),
+                "max_new_tokens": int(r.max_new_tokens),
+                "dataset": r.dataset,
+                "ttft_slo_s": r.ttft_slo_s,
+                "tpot_slo_s": r.tpot_slo_s,
+            }) + "\n")
+
+
+def load_trace(path: str, ttft_slo: Optional[float] = None,
+               tpot_slo: Optional[float] = None) -> List[Request]:
+    """Load a JSONL arrival trace written by ``save_trace`` (or by hand).
+    ``ttft_slo``/``tpot_slo`` override the per-request SLOs when given
+    (replaying one trace under several SLO regimes)."""
+    out: List[Request] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            out.append(Request(
+                request_id=d["request_id"],
+                arrival_s=float(d["arrival_s"]),
+                prompt=np.asarray(d["prompt"], np.int64),
+                max_new_tokens=int(d["max_new_tokens"]),
+                dataset=d.get("dataset", "trace"),
+                ttft_slo_s=(ttft_slo if ttft_slo is not None
+                            else d.get("ttft_slo_s")),
+                tpot_slo_s=(tpot_slo if tpot_slo is not None
+                            else d.get("tpot_slo_s"))))
+    out.sort(key=lambda r: r.arrival_s)
+    return out
+
+
+def streams_bit_exact(requests: Sequence[Request],
+                      references: Sequence[np.ndarray]) -> bool:
+    """A/B bit-equality helper: every SERVED request's committed stream
+    must equal its reference (target-only) stream.  Shed requests have no
+    stream and are skipped.  A served request with ``output_tokens``
+    unset raises a clear ValueError instead of the silent
+    False/TypeError ``np.array_equal(None, ...)`` produces."""
+    if len(requests) != len(references):
+        raise ValueError(
+            f"bit-equality check over mismatched populations: "
+            f"{len(requests)} requests vs {len(references)} references")
+    for r, ref in zip(requests, references):
+        if r.shed:
+            continue
+        if r.output_tokens is None:
+            raise ValueError(
+                f"request {r.request_id!r} has no committed output stream "
+                "(output_tokens unset) — run it through an engine before "
+                "bit-equality checks")
+        if not np.array_equal(np.asarray(r.output_tokens),
+                              np.asarray(ref)):
+            return False
+    return True

@@ -27,6 +27,21 @@ default 16) refreshing the scheduler's per-op timings; ``fused=False``
 restores the per-op host-orchestrated loop
 (``benchmarks/cycle_overhead.py`` is the A/B).
 
+SLO-aware serving (continuous mode): every request may carry a TTFT/TPOT
+SLO (``data/workload.py``; engine-level ``ttft_slo_s``/``tpot_slo_s``
+fill unset ones).  When any SLO is configured the scheduler's objective
+switches from raw T_eff to predicted SLO attainment — the engine
+publishes a ``LoadSignal`` (run-queue depth, slot occupancy, profiler
+cycle-latency EMA) before every cycle, and under pressure the chain
+search shrinks speculation windows / flattens trees / drops slots to
+target-only so queued requests' first tokens are not starved by deep
+speculation.  Admission becomes earliest-TTFT-deadline-first (exact FIFO
+for no-SLO populations), and ``shed_policy="ttft"`` drops queued
+requests whose deadline is already unmeetable.  With no SLOs configured
+everything degenerates to the latency-only scheduler bit-exactly
+(``tests/test_slo_scheduling.py`` pins this; ``benchmarks/goodput_ab.py``
+is the A/B).
+
 Legacy model (``continuous=False``): stop-the-world batch formation —
 requests queue until ``batch_size`` are available (or ``batch_wait_s``
 elapses), then the batch generates to completion.  Kept as the reproducible
@@ -47,7 +62,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core import ChainRouter, ModelPool, PerformanceProfiler
+from ..core import ChainRouter, LoadSignal, ModelPool, PerformanceProfiler
 from ..data.workload import Request
 
 # serving keeps a bounded op trace: the profiler's EMAs/counters (what the
@@ -71,6 +86,13 @@ class ServingMetrics:
     makespan_s: float
     avg_acceptance_len: float
     avg_queue_s: float = 0.0        # arrival -> slot admission
+    # per-request SLO goodput (SpecServe's metric): a request counts iff
+    # it finished AND met every SLO it carries (Request.slo_met) — shed
+    # or late requests are misses.  Populations with no SLOs configured
+    # reduce to plain request throughput / 100% attainment.
+    slo_goodput_rps: float = float("nan")   # SLO-met requests per second
+    request_slo_attainment: float = float("nan")  # met / ALL offered
+    num_shed: int = 0               # dropped by the admission shed policy
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -83,13 +105,31 @@ class ServingEngine:
                  router_kwargs: Optional[dict] = None,
                  continuous: bool = True,
                  paged: Optional[bool] = None,
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 ttft_slo_s: Optional[float] = None,
+                 tpot_slo_s: Optional[float] = None,
+                 slo_aware: Optional[bool] = None,
+                 shed_policy: str = "none"):
         self.pool = pool
         self.target = target
         self.batch_size = batch_size       # slot count in continuous mode
         self.batch_wait_s = batch_wait_s   # legacy batch-formation window
         self.slo = slo_latency_s
         self.continuous = continuous
+        # --- SLO-aware serving (continuous mode) ------------------------
+        # ``ttft_slo_s``/``tpot_slo_s`` fill in for requests that carry no
+        # SLO of their own (per-request SLOs always win).  ``slo_aware``
+        # switches the scheduler's objective to goodput (None = auto:
+        # active iff any request carries an SLO); ``shed_policy="ttft"``
+        # drops queued requests whose TTFT deadline is already unmeetable
+        # instead of burning slot capacity on guaranteed misses.
+        self.ttft_slo_s = ttft_slo_s
+        self.tpot_slo_s = tpot_slo_s
+        self.slo_aware = slo_aware
+        if shed_policy not in ("none", "ttft"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r} "
+                             "(expected 'none' or 'ttft')")
+        self.shed_policy = shed_policy
         self.router_kwargs = dict(router_kwargs or {})
         if paged is not None:              # engine-level A/B convenience
             self.router_kwargs.setdefault("paged", paged)
@@ -105,6 +145,20 @@ class ServingEngine:
 
     def run(self, requests: Sequence[Request]) -> ServingMetrics:
         reqs = sorted(requests, key=lambda r: r.arrival_s)
+        # engine-level SLO defaults fill requests that carry none
+        if self.ttft_slo_s is not None or self.tpot_slo_s is not None:
+            for r in reqs:
+                if r.ttft_slo_s is None:
+                    r.ttft_slo_s = self.ttft_slo_s
+                if r.tpot_slo_s is None:
+                    r.tpot_slo_s = self.tpot_slo_s
+        has_slo = any(r.ttft_slo_s is not None or r.tpot_slo_s is not None
+                      for r in reqs)
+        # goodput objective: auto-activates when any request carries an
+        # SLO; ``slo_aware=False`` forces the latency-only argmin even
+        # then (the A/B baseline in benchmarks/goodput_ab.py)
+        self._router.scheduler.slo_aware = (
+            self.slo_aware if self.slo_aware is not None else has_slo)
         if self.continuous:
             acc_lens = self._run_continuous(reqs)
         else:
@@ -162,24 +216,55 @@ class ServingEngine:
         slot_req: List[Optional[Request]] = [None] * B
         clock = 0.0
         i = 0
+        queue: List[Request] = []   # arrived, waiting for a free slot
         acc_lens: List[float] = []
         # each cycle commits >= 1 token per active slot, so total cycles is
         # bounded by the total token budget; the cap is a corruption guard
         cycle_cap = sum(r.max_new_tokens for r in reqs) * 4 + 16 * len(reqs)
         cycles = 0
-        while i < len(reqs) or any(r is not None for r in slot_req):
+        while (i < len(reqs) or queue
+               or any(r is not None for r in slot_req)):
             busy = any(r is not None for r in slot_req)
-            if not busy and reqs[i].arrival_s > clock:
+            if not busy and not queue and reqs[i].arrival_s > clock:
                 clock = reqs[i].arrival_s          # idle: jump to arrival
-            # admission between cycles: fill free slots with arrived reqs
+            # run-queue refill: every arrival up to the current clock
+            while i < len(reqs) and reqs[i].arrival_s <= clock:
+                queue.append(reqs[i])
+                i += 1
+            # shed policy: a queued request whose TTFT deadline is already
+            # unmeetable — it cannot commit a first token before at least
+            # one more cycle elapses (cycle-latency EMA) — is dropped NOW,
+            # so slot capacity goes to requests that can still meet SLO
+            if self.shed_policy == "ttft" and queue:
+                est = self._router.profiler.cycle_time()
+                kept = []
+                for q in queue:
+                    if clock + est >= q.ttft_deadline_s:
+                        q.shed = True
+                    else:
+                        kept.append(q)
+                queue = kept
+            # SLO-aware admission order: earliest TTFT deadline first.
+            # Requests without a TTFT SLO have an infinite deadline, and
+            # the arrival-time tie-break keeps them (and whole no-SLO
+            # populations) in exact FIFO order — today's behaviour.
+            queue.sort(key=lambda q: (q.ttft_deadline_s, q.arrival_s))
             for s in range(B):
-                if (slot_req[s] is None and i < len(reqs)
-                        and reqs[i].arrival_s <= clock):
-                    r = reqs[i]
-                    i += 1
+                if slot_req[s] is None and queue:
+                    r = queue.pop(0)
                     r.start_s = clock   # queueing ends, service begins
-                    clock += sess.admit(s, r.prompt, r.max_new_tokens)
+                    clock += sess.admit(s, r.prompt, r.max_new_tokens,
+                                        ttft_slo_s=r.ttft_slo_s,
+                                        tpot_slo_s=r.tpot_slo_s)
                     slot_req[s] = r
+            # publish the load signal the goodput-aware chain search
+            # reads: residual run-queue depth, slot occupancy, and the
+            # profiler's cycle-latency EMA
+            busy_n = sum(r is not None for r in slot_req)
+            self._router.scheduler.set_load(LoadSignal(
+                queue_depth=len(queue), occupancy=busy_n / B,
+                cycle_ema_s=self._router.profiler.cycle_time(),
+                num_slots=B))
             rep = sess.run_cycle()
             clock += rep.wall_s
             cycles += 1
@@ -200,6 +285,9 @@ class ServingEngine:
                 raise RuntimeError("continuous engine exceeded cycle cap "
                                    "(stuck slot?)")
         sess.close()
+        # the load signal is scoped to this run — a later run (or a bare
+        # scheduler user) must not inherit a stale pressure reading
+        self._router.scheduler.set_load(None)
         return acc_lens
 
     # ------------------------------------------------------------------
@@ -270,6 +358,11 @@ class ServingEngine:
     def _metrics(self, reqs: List[Request],
                  acc_lens: List[float]) -> ServingMetrics:
         done = [r for r in reqs if r.finish_s >= 0]
+        num_shed = sum(1 for r in reqs if r.shed)
+        # per-request SLO attainment over the WHOLE offered population:
+        # shed and unfinished requests are misses by definition
+        attain = (float(np.mean([r.slo_met for r in reqs])) if reqs
+                  else float("nan"))
         if not done:
             # degenerate run (nothing finished): NaN-safe metrics instead
             # of max()/mean() raising on empty sequences
@@ -279,7 +372,9 @@ class ServingEngine:
                 avg_ttft_s=nan, p95_ttft_s=nan, avg_tpot_s=nan,
                 avg_latency_s=nan, p95_latency_s=nan, slo_attainment=nan,
                 total_tokens=0, num_requests=0, makespan_s=0.0,
-                avg_acceptance_len=0.0, avg_queue_s=0.0)
+                avg_acceptance_len=0.0, avg_queue_s=0.0,
+                slo_goodput_rps=nan, request_slo_attainment=attain,
+                num_shed=num_shed)
         total_tokens = sum(r.generated for r in done)
         makespan = max(r.finish_s for r in done) - min(r.arrival_s
                                                        for r in done)
@@ -305,4 +400,7 @@ class ServingEngine:
             makespan_s=makespan,
             avg_acceptance_len=float(np.mean(acc_lens)) if acc_lens else 0.0,
             avg_queue_s=float(queues.mean()) if queues.size else 0.0,
+            slo_goodput_rps=sum(r.slo_met for r in done) / rate_denom,
+            request_slo_attainment=attain,
+            num_shed=num_shed,
         )

@@ -1,0 +1,381 @@
+"""Serving-conformance suite for SLO-aware goodput scheduling.
+
+Pins, with deterministic synthetic load where possible:
+  * LoadSignal pressure math and the goodput objective (score_choice);
+  * the degenerate no-SLO path — bit-identical choices AND tables vs the
+    latency-only scheduler (today's behaviour must survive the refactor);
+  * shrink-under-pressure / deepen-when-idle window dynamics;
+  * Eq. 7 memo invalidation across a load-signal step change (a stale
+    memo would keep serving deep speculation into a saturated engine);
+  * the slot-TPOT infeasibility penalty;
+  * ServingMetrics against a straight-numpy oracle (incl. NaN guards);
+  * engine-level EDF admission and the TTFT shed policy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LoadSignal, ModelChainScheduler, ModelPool,
+                        PerformanceProfiler, SimilarityStore)
+from repro.data import (CorpusConfig, Request, SyntheticCorpus,
+                        make_bursty_workload)
+from repro.models import ModelConfig
+from repro.models.model import LanguageModel
+from repro.serving import ServingEngine
+
+
+def _mk(slo_aware=True, **kw):
+    """Two-model pool with pinned EMAs: d=1ms draft, t=100ms target,
+    sim 0.95 — deep speculation clearly optimal when idle."""
+    prof = PerformanceProfiler()
+    prof.record("decode1", "d", 0.001)
+    prof.record("decode1", "t", 0.1)
+    store = SimilarityStore()
+    store.update("d", "t", 0.05)
+    kw.setdefault("windows", (1, 2, 4, 8))
+    kw.setdefault("switch_penalty_steps", 1e9)
+    return ModelChainScheduler(["d", "t"], "t", prof, store,
+                               {"d": 1, "t": 100}, slo_aware=slo_aware,
+                               **kw)
+
+
+def _pressure(p, slots=8):
+    """LoadSignal with the given pressure (full occupancy, queue scaled)."""
+    return LoadSignal(queue_depth=int(round(p * slots)), occupancy=1.0,
+                      cycle_ema_s=0.01, num_slots=slots)
+
+
+# ---------------------------------------------------------------------------
+# load-signal math
+# ---------------------------------------------------------------------------
+def test_load_signal_pressure_pinned():
+    # empty queue -> zero pressure regardless of occupancy: a
+    # full-but-keeping-up engine must still speculate deep
+    assert LoadSignal(0, 1.0, 0.5, 4).pressure == 0.0
+    # saturated: queue >= slots, all busy
+    assert LoadSignal(4, 1.0, 0.5, 4).pressure == 1.0
+    assert LoadSignal(8, 1.0, 0.5, 4).pressure == 1.0      # queue clipped
+    assert LoadSignal(4, 1.5, 0.5, 4).pressure == 1.0      # occ clipped
+    # partial: (2/4) * 0.5
+    assert LoadSignal(2, 0.5, 0.5, 4).pressure == pytest.approx(0.25)
+    assert LoadSignal(2, 0.0, 0.5, 4).pressure == 0.0
+    assert LoadSignal(2, 0.5, 0.5, 0).pressure == 0.0      # no slots
+
+
+def test_score_choice_math_pinned():
+    sched = _mk()   # load_beta=8, slo_miss_penalty=4 defaults
+    sched.set_load(LoadSignal(4, 0.5, 0.01, 8))  # pressure 0.25
+    assert sched.score_choice(0.02, 0.1) == pytest.approx(
+        0.02 + 0.25 * 8.0 * 0.1)
+    # slot TPOT SLO: infeasible option pays the soft penalty...
+    sched.set_slot_slo("s", tpot_slo_s=0.01)
+    assert sched.score_choice(0.02, 0.1, slot="s") == pytest.approx(
+        0.02 + 0.25 * 8.0 * 0.1 + 4.0 * (0.02 - 0.01))
+    # ...a feasible one doesn't
+    assert sched.score_choice(0.005, 0.1, slot="s") == pytest.approx(
+        0.005 + 0.25 * 8.0 * 0.1)
+    # without load the objective IS t_eff, even with slo_aware on
+    sched.set_load(None)
+    assert sched.score_choice(0.02, 0.1, slot="s") == 0.02
+
+
+# ---------------------------------------------------------------------------
+# degenerate no-SLO path: bit-identical to the latency-only scheduler
+# ---------------------------------------------------------------------------
+def test_no_slo_path_is_bit_identical():
+    base = _mk(slo_aware=False)
+    want = base.get_optimal_chain()
+    assert want.score == want.predicted_t_eff   # objective == T_eff
+
+    # slo_aware off + load set: still latency-only
+    a = _mk(slo_aware=False)
+    a.set_load(_pressure(1.0))
+    got_a = a.get_optimal_chain()
+    # slo_aware on but NO load signal (bare scheduler user): latency-only
+    b = _mk(slo_aware=True)
+    got_b = b.get_optimal_chain()
+    for got in (got_a, got_b):
+        assert got.chain == want.chain and got.window == want.window
+        assert got.predicted_t_eff == want.predicted_t_eff
+        assert got.score == want.score
+        assert got.table == want.table          # every candidate identical
+    # and the memo snapshot carries no load/SLO keys -> identical reuse
+    assert not any(k[0] in ("load", "slo") for k in a._inputs_snapshot())
+    assert not any(k[0] in ("load", "slo") for k in b._inputs_snapshot())
+
+
+def test_idle_goodput_path_matches_latency_only():
+    """pressure == 0 (active goodput objective, nothing queued): the
+    score reduces to exactly T_eff — idle engines speculate as deep as
+    today."""
+    base = _mk(slo_aware=False)
+    want = base.get_optimal_chain()
+    sched = _mk(slo_aware=True)
+    sched.set_load(_pressure(0.0))
+    got = sched.get_optimal_chain()
+    assert (got.chain, got.window) == (want.chain, want.window)
+    assert got.table == pytest.approx(want.table)
+    assert got.window == 8                       # deep when idle
+
+
+# ---------------------------------------------------------------------------
+# shrink under pressure / deepen when idle
+# ---------------------------------------------------------------------------
+def test_window_shrinks_under_pressure_to_target_only():
+    sched = _mk()
+    chosen = []
+    for p in (0.0, 0.125, 0.25, 1.0):
+        sched.set_load(_pressure(p))
+        c = sched.get_optimal_chain()
+        cost, _ = sched.predict_costs(c.chain, c.window, tree=c.tree)
+        chosen.append((p, c, cost))
+    # endpoints pinned: idle -> deep W=8 chain; saturated -> target-only
+    assert chosen[0][1].chain == ("d", "t") and chosen[0][1].window == 8
+    assert chosen[-1][1].chain == ("t",)
+    # speculation depth (and thus cycle wall) shrinks monotonically
+    windows = [c.window if len(c.chain) > 1 else 0 for _, c, _ in chosen]
+    assert windows == sorted(windows, reverse=True)
+    costs = [cost for _, _, cost in chosen]
+    assert costs == sorted(costs, reverse=True)
+    # intermediate pressure keeps SOME speculation (not a cliff)
+    assert len(chosen[1][1].chain) > 1
+
+
+def test_deepen_when_pressure_recedes():
+    sched = _mk()
+    sched.set_load(_pressure(1.0))
+    assert sched.get_optimal_chain().chain == ("t",)
+    sched.set_load(_pressure(0.0))
+    c = sched.get_optimal_chain()
+    assert c.chain == ("d", "t") and c.window == 8
+
+
+def test_tpot_penalty_keeps_speculation_for_tight_slots():
+    """At saturation the pressure term alone prefers target-only — but a
+    slot whose TPOT SLO the target-only T_eff (0.1 s/token) would blow
+    keeps a shallow speculative chain instead (0.057 s/token feasible
+    region), while a no-SLO slot in the same sweep drops to target-only."""
+    sched = _mk()
+    sched.set_load(_pressure(1.0))
+    assert sched.get_optimal_chain(slot="free").chain == ("t",)
+    sched.set_slot_slo("tight", tpot_slo_s=0.04)
+    c = sched.get_optimal_chain(slot="tight")
+    assert c.chain == ("d", "t")
+    assert c.predicted_t_eff < 0.1               # faster than target-only
+
+
+# ---------------------------------------------------------------------------
+# memo invalidation across load / SLO step changes (regression)
+# ---------------------------------------------------------------------------
+def test_memo_invalidated_on_load_step_change():
+    sched = _mk()
+    sched.set_load(_pressure(0.0))
+    c1 = sched.get_optimal_chain()
+    assert sched.eval_count == 1
+    assert sched.get_optimal_chain() is c1 and sched.reuse_count == 1
+    # an equal-valued fresh LoadSignal is NOT drift
+    sched.set_load(_pressure(0.0))
+    assert sched.get_optimal_chain() is c1 and sched.reuse_count == 2
+    # a load step change MUST invalidate the memo — a stale argmin would
+    # keep running deep speculation into a saturated engine
+    sched.set_load(_pressure(1.0))
+    c2 = sched.get_optimal_chain()
+    assert sched.eval_count == 2 and c2.chain == ("t",)
+    # ...and stepping back down re-deepens
+    sched.set_load(_pressure(0.0))
+    c3 = sched.get_optimal_chain()
+    assert sched.eval_count == 3
+    assert c3.chain == ("d", "t") and c3.window == 8
+    # clearing the load changes the snapshot key set: latency-only again
+    sched.set_load(None)
+    c4 = sched.get_optimal_chain()
+    assert sched.eval_count == 4 and c4.score == c4.predicted_t_eff
+
+
+def test_slot_memo_invalidated_on_load_and_slo_change():
+    sched = _mk()
+    sched.set_load(_pressure(0.0))
+    c1 = sched.get_optimal_chain(slot="s0")
+    assert sched.eval_count == 1
+    assert sched.get_optimal_chain(slot="s0") is c1
+    sched.set_load(_pressure(1.0))
+    c2 = sched.get_optimal_chain(slot="s0")
+    assert sched.eval_count == 2 and c2.chain == ("t",)
+    # attaching a TPOT SLO to the slot is also snapshot drift
+    sched.set_slot_slo("s0", tpot_slo_s=0.04)
+    c3 = sched.get_optimal_chain(slot="s0")
+    assert sched.eval_count == 3 and c3.chain == ("d", "t")
+    # release clears the slot's SLO alongside its memo
+    sched.release_slot("s0")
+    assert "s0" not in sched._slot_slo and "s0" not in sched._slot_choice
+
+
+# ---------------------------------------------------------------------------
+# ServingMetrics vs numpy oracle (engine-level tests below need the pool)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def pool():
+    p = ModelPool()
+    for (n, L, d, s) in [("s", 2, 32, 1), ("t", 3, 48, 2)]:
+        cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
+                          d_model=d, num_heads=4, num_kv_heads=2,
+                          d_ff=2 * d, vocab_size=64, dtype=jnp.float32)
+        lm = LanguageModel(cfg)
+        params, axes = lm.init(jax.random.PRNGKey(s))
+        p.register(cfg, params=params, param_axes=axes)
+    return p
+
+
+def _oracle_slo_met(r):
+    """Independent re-derivation of Request.slo_met from raw fields."""
+    if r.shed or r.finish_s < 0:
+        return False
+    if r.ttft_slo_s is not None \
+            and (r.first_token_s - r.arrival_s) > r.ttft_slo_s:
+        return False
+    if r.tpot_slo_s is not None and r.generated > 1 \
+            and (r.finish_s - r.first_token_s) / (r.generated - 1) \
+            > r.tpot_slo_s:
+        return False
+    return True
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_metrics_match_numpy_oracle(pool, seed):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(60):
+        arr = float(rng.uniform(0, 10))
+        start = arr + float(rng.uniform(0, 0.5))
+        first = start + float(rng.uniform(0, 0.5))
+        r = Request(f"r{i}", arr, np.array([1, 2]), 32, "synthetic",
+                    ttft_slo_s=(float(rng.uniform(0.1, 1.5))
+                                if rng.random() < 0.7 else None),
+                    tpot_slo_s=(float(rng.uniform(0.01, 0.3))
+                                if rng.random() < 0.7 else None),
+                    start_s=start, first_token_s=first,
+                    finish_s=first + float(rng.uniform(0, 3)),
+                    generated=int(rng.integers(1, 30)))
+        u = rng.random()
+        if u < 0.12:          # shed: never served at all
+            r.shed = True
+            r.start_s = r.first_token_s = r.finish_s = -1.0
+            r.generated = 0
+        elif u < 0.18:        # admitted but never finished
+            r.finish_s = -1.0
+        reqs.append(r)
+    acc = [float(x) for x in rng.uniform(1, 4, size=9)]
+    eng = ServingEngine(pool, "t", slo_latency_s=3.0)
+    m = eng._metrics(reqs, acc)
+
+    done = [r for r in reqs if r.finish_s >= 0]
+    ttfts = np.array([r.first_token_s - r.arrival_s for r in done])
+    lats = np.array([r.finish_s - r.arrival_s for r in done])
+    tpots = np.array([(r.finish_s - r.first_token_s) / (r.generated - 1)
+                      for r in done if r.generated > 1])
+    queues = np.array([r.start_s - r.arrival_s for r in done])
+    makespan = (max(r.finish_s for r in done)
+                - min(r.arrival_s for r in done))
+    assert m.num_requests == len(done)
+    assert m.makespan_s == pytest.approx(makespan)
+    assert m.avg_ttft_s == pytest.approx(ttfts.mean())
+    assert m.p95_ttft_s == pytest.approx(np.percentile(ttfts, 95))
+    assert m.avg_latency_s == pytest.approx(lats.mean())
+    assert m.p95_latency_s == pytest.approx(np.percentile(lats, 95))
+    assert m.avg_tpot_s == pytest.approx(tpots.mean())
+    assert m.avg_queue_s == pytest.approx(queues.mean())
+    assert m.slo_attainment == pytest.approx(np.mean(lats <= 3.0))
+    assert m.total_tokens == sum(r.generated for r in done)
+    assert m.goodput_tps == pytest.approx(m.total_tokens / makespan)
+    assert m.request_throughput_rps == pytest.approx(len(done) / makespan)
+    assert m.avg_acceptance_len == pytest.approx(np.mean(acc))
+    met = np.array([_oracle_slo_met(r) for r in reqs])
+    assert m.request_slo_attainment == pytest.approx(met.mean())
+    assert m.slo_goodput_rps == pytest.approx(
+        sum(_oracle_slo_met(r) for r in done) / makespan)
+    assert m.num_shed == sum(r.shed for r in reqs)
+
+
+def test_metrics_all_shed_population(pool):
+    """Everything shed: done-set empty, attainment 0 (not NaN — the
+    offered population is non-empty), rates NaN-guarded."""
+    rs = [Request(f"r{i}", 0.0, np.array([1]), 4, "s",
+                  ttft_slo_s=0.1, shed=True) for i in range(3)]
+    m = ServingEngine(pool, "t")._metrics(rs, [])
+    assert m.num_shed == 3 and m.num_requests == 0
+    assert m.request_slo_attainment == 0.0
+    assert np.isnan(m.goodput_tps) and np.isnan(m.slo_goodput_rps)
+
+
+# ---------------------------------------------------------------------------
+# engine-level EDF admission + shed policy
+# ---------------------------------------------------------------------------
+def _req(rid, seed, arrival, lp, budget, ttft=None, tpot=None):
+    rng = np.random.default_rng(seed)
+    return Request(rid, arrival,
+                   rng.integers(1, 64, size=lp).astype(np.int64),
+                   budget, "synthetic", ttft_slo_s=ttft, tpot_slo_s=tpot)
+
+
+def test_edf_admission_order(pool):
+    """Three simultaneous arrivals on ONE slot: service order must follow
+    TTFT deadlines, not submission order."""
+    reqs = [_req("r0", 0, 0.0, 6, 4, ttft=100.0),
+            _req("r1", 1, 0.0, 6, 4, ttft=5.0),
+            _req("r2", 2, 0.0, 6, 4, ttft=50.0)]
+    eng = ServingEngine(pool, "t", batch_size=1,
+                        router_kwargs=dict(adaptive=False,
+                                           fixed_chain=("t",),
+                                           fixed_window=1))
+    eng.run(list(reqs))
+    start = {r.request_id: r.start_s for r in reqs}
+    assert start["r1"] < start["r2"] < start["r0"]
+    for r in reqs:
+        assert r.finish_s >= 0 and r.output_tokens is not None
+
+
+def test_shed_policy_drops_unmeetable(pool):
+    """One busy slot; a queued request whose TTFT deadline passes while
+    it waits is dropped (never admitted), and counts as an SLO miss."""
+    r0 = _req("r0", 0, 0.0, 6, 6)                       # no SLO
+    r1 = _req("r1", 1, 0.001, 6, 4, ttft=0.004)         # doomed: ~4 ms
+    eng = ServingEngine(pool, "t", batch_size=1, shed_policy="ttft",
+                        router_kwargs=dict(adaptive=False,
+                                           fixed_chain=("t",),
+                                           fixed_window=1))
+    m = eng.run([r0, r1])
+    assert r1.shed and r1.finish_s < 0 and r1.output_tokens is None
+    assert not r0.shed and r0.finish_s > 0
+    assert m.num_shed == 1
+    assert m.request_slo_attainment == pytest.approx(0.5)
+
+
+def test_shed_policy_validated(pool):
+    with pytest.raises(ValueError, match="shed_policy"):
+        ServingEngine(pool, "t", shed_policy="bogus")
+
+
+def test_slo_serving_integration(pool):
+    """Bursty SLO workload end-to-end with the goodput objective on:
+    engine-level TPOT default fills unset axes, the load signal is
+    cleared after the run, and every request still completes."""
+    corpus = SyntheticCorpus(CorpusConfig(vocab_size=64))
+    reqs = make_bursty_workload(corpus, "gsm8k", rate_on_rps=6.0,
+                                duration_s=2.0, mean_on_s=0.5,
+                                mean_off_s=0.5, seed=4, scale=0.08,
+                                max_prompt=12, max_out=6, ttft_slo=30.0)
+    assert len(reqs) >= 2
+    eng = ServingEngine(pool, "t", batch_size=2, slo_aware=True,
+                        tpot_slo_s=5.0,
+                        router_kwargs=dict(adaptive=True))
+    m = eng.run(reqs)
+    sched = eng._router.scheduler
+    assert sched.slo_aware and sched._load is None   # scoped to the run
+    assert m.num_requests == len(reqs) and m.num_shed == 0
+    assert 0.0 <= m.request_slo_attainment <= 1.0
+    assert np.isfinite(m.slo_goodput_rps)
+    for r in reqs:
+        assert r.ttft_slo_s == 30.0 and r.tpot_slo_s == 5.0
+        assert r.output_tokens is not None
+        assert r.generated == len(r.output_tokens)

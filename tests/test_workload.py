@@ -1,0 +1,219 @@
+"""Direct conformance tests for the workload generators in
+``data/workload.py`` — the open-loop request source every serving A/B
+depends on: seeded determinism, lognormal length-profile sanity, Poisson
+inter-arrival statistics, MMPP burst duty cycle, JSONL trace round-trip,
+SLO resolution, and the ``streams_bit_exact`` A/B helper's unset-stream
+guard."""
+import numpy as np
+import pytest
+
+from repro.data import (DATASET_SLOS, CorpusConfig, Request,
+                        SyntheticCorpus, load_trace, make_bursty_workload,
+                        make_workload, resolve_slo, save_trace,
+                        streams_bit_exact)
+from repro.data.workload import DATASET_PROFILES
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return SyntheticCorpus(CorpusConfig(vocab_size=64))
+
+
+# ---------------------------------------------------------------------------
+# seeded determinism
+# ---------------------------------------------------------------------------
+def _fingerprint(reqs):
+    return [(r.request_id, round(r.arrival_s, 12), r.prompt.tolist(),
+             r.max_new_tokens, r.ttft_slo_s, r.tpot_slo_s) for r in reqs]
+
+
+def test_seeded_determinism_poisson(corpus):
+    a = make_workload(corpus, "gsm8k", 4.0, 10.0, seed=7)
+    b = make_workload(corpus, "gsm8k", 4.0, 10.0, seed=7)
+    assert _fingerprint(a) == _fingerprint(b)
+    c = make_workload(corpus, "gsm8k", 4.0, 10.0, seed=8)
+    assert _fingerprint(a) != _fingerprint(c)
+
+
+def test_seeded_determinism_bursty(corpus):
+    kw = dict(rate_on_rps=8.0, duration_s=20.0, mean_on_s=1.0,
+              mean_off_s=3.0, seed=5)
+    a = make_bursty_workload(corpus, "gsm8k", **kw)
+    b = make_bursty_workload(corpus, "gsm8k", **kw)
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+# ---------------------------------------------------------------------------
+# length profiles
+# ---------------------------------------------------------------------------
+def test_lognormal_profile_bounds_and_means(corpus):
+    reqs = make_workload(corpus, "humaneval", 20.0, 40.0, seed=3,
+                         scale=0.25, max_prompt=400, max_out=400)
+    assert len(reqs) > 300
+    plens = np.array([len(r.prompt) for r in reqs])
+    olens = np.array([r.max_new_tokens for r in reqs])
+    assert plens.min() >= 4 and plens.max() <= 400
+    assert olens.min() >= 4 and olens.max() <= 400
+    # with generous clip bounds the sample mean must sit near the
+    # lognormal mean exp(mu + sigma^2/2) * scale (loose 2x band)
+    pmu, psig, omu, osig = DATASET_PROFILES["humaneval"]
+    want_p = np.exp(pmu + psig ** 2 / 2) * 0.25
+    want_o = np.exp(omu + osig ** 2 / 2) * 0.25
+    assert want_p / 2 < plens.mean() < want_p * 2
+    assert want_o / 2 < olens.mean() < want_o * 2
+
+
+def test_profile_clipping(corpus):
+    reqs = make_workload(corpus, "mtbench", 10.0, 10.0, seed=1,
+                         max_prompt=12, max_out=6)
+    assert max(len(r.prompt) for r in reqs) <= 12
+    assert max(r.max_new_tokens for r in reqs) <= 6
+
+
+# ---------------------------------------------------------------------------
+# arrival statistics
+# ---------------------------------------------------------------------------
+def test_poisson_interarrival_statistics(corpus):
+    rate = 10.0
+    reqs = make_workload(corpus, "gsm8k", rate, 100.0, seed=11)
+    arr = np.array([r.arrival_s for r in reqs])
+    assert np.all(np.diff(arr) >= 0) and arr.max() < 100.0
+    gaps = np.diff(arr)
+    # exponential inter-arrivals: mean 1/rate, CV 1 (loose 25% bands at
+    # ~1000 samples)
+    assert abs(gaps.mean() - 1.0 / rate) < 0.25 / rate
+    cv = gaps.std() / gaps.mean()
+    assert 0.75 < cv < 1.25
+
+
+def test_mmpp_duty_cycle_and_burst_confinement(corpus):
+    mean_on, mean_off = 1.0, 3.0
+    reqs, states = make_bursty_workload(
+        corpus, "gsm8k", rate_on_rps=20.0, duration_s=200.0,
+        rate_off_rps=0.0, mean_on_s=mean_on, mean_off_s=mean_off,
+        seed=13, return_states=True)
+    # states tile [0, duration) without gaps and alternate on/off
+    assert states[0][0] == 0.0
+    for (s0, e0, on0), (s1, e1, on1) in zip(states, states[1:]):
+        assert abs(e0 - s1) < 1e-9 and on0 != on1
+    on_time = sum(e - s for s, e, on in states if on)
+    total = sum(e - s for s, e, _ in states)
+    # duty cycle ~ mean_on / (mean_on + mean_off) = 0.25 (loose band:
+    # ~50 cycles of each state at duration 200)
+    duty = on_time / total
+    want = mean_on / (mean_on + mean_off)
+    assert abs(duty - want) < 0.12
+    # rate_off = 0: every arrival falls inside an ON interval
+    on_iv = [(s, e) for s, e, on in states if on]
+    for r in reqs:
+        assert any(s <= r.arrival_s <= e for s, e in on_iv)
+    # arrival volume ~ rate_on * on_time (loose 25% band)
+    assert abs(len(reqs) - 20.0 * on_time) < 0.25 * 20.0 * on_time
+
+
+def test_mmpp_off_rate_trickle(corpus):
+    reqs, states = make_bursty_workload(
+        corpus, "gsm8k", rate_on_rps=20.0, duration_s=120.0,
+        rate_off_rps=1.0, mean_on_s=1.0, mean_off_s=3.0, seed=17,
+        return_states=True)
+    off_iv = [(s, e) for s, e, on in states if not on]
+    n_off = sum(1 for r in reqs
+                if any(s <= r.arrival_s <= e for s, e in off_iv))
+    assert n_off > 0                      # the OFF state does trickle
+    assert n_off < 0.5 * len(reqs)        # ...but bursts dominate
+
+
+# ---------------------------------------------------------------------------
+# trace replay
+# ---------------------------------------------------------------------------
+def test_trace_round_trip(tmp_path, corpus):
+    reqs = make_bursty_workload(corpus, "humaneval", rate_on_rps=5.0,
+                                duration_s=10.0, seed=3, with_slo=True)
+    assert reqs, "empty workload would vacuously pass"
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(reqs, path)
+    back = load_trace(path)
+    assert _fingerprint(back) == _fingerprint(reqs)
+    for a, b in zip(reqs, back):
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+        assert b.prompt.dtype == np.int64
+        # engine-filled fields are NOT replayed
+        assert b.start_s < 0 and b.finish_s < 0 and not b.shed
+
+
+def test_trace_slo_override(tmp_path, corpus):
+    reqs = make_workload(corpus, "gsm8k", 5.0, 5.0, seed=2)
+    path = str(tmp_path / "t.jsonl")
+    save_trace(reqs, path)
+    back = load_trace(path, ttft_slo=1.5, tpot_slo=0.25)
+    assert all(r.ttft_slo_s == 1.5 and r.tpot_slo_s == 0.25 for r in back)
+
+
+# ---------------------------------------------------------------------------
+# SLO resolution + Request SLO semantics
+# ---------------------------------------------------------------------------
+def test_slo_defaults_and_overrides(corpus):
+    # default: no SLO at all
+    r0 = make_workload(corpus, "gsm8k", 5.0, 5.0, seed=1)[0]
+    assert r0.ttft_slo_s is None and r0.tpot_slo_s is None
+    assert r0.ttft_deadline_s == float("inf")
+    # with_slo: per-dataset defaults
+    r1 = make_workload(corpus, "gsm8k", 5.0, 5.0, seed=1,
+                       with_slo=True)[0]
+    assert (r1.ttft_slo_s, r1.tpot_slo_s) == DATASET_SLOS["gsm8k"]
+    # explicit values override the dataset default per axis
+    r2 = make_workload(corpus, "gsm8k", 5.0, 5.0, seed=1,
+                       with_slo=True, ttft_slo=9.0)[0]
+    assert r2.ttft_slo_s == 9.0
+    assert r2.tpot_slo_s == DATASET_SLOS["gsm8k"][1]
+    # an explicit SLO alone activates SLOs without with_slo
+    assert resolve_slo("gsm8k", ttft_slo=3.0) == (3.0, None)
+    assert resolve_slo("gsm8k") == (None, None)
+
+
+def test_request_slo_met():
+    base = dict(prompt=np.array([1, 2]), max_new_tokens=4,
+                dataset="synthetic")
+    # met: ttft = 2.0 - 1.0 = 1.0 <= 2.0, tpot = (4-2)/(4-1) ~ 0.67 <= 1.0
+    r = Request("a", 1.0, ttft_slo_s=2.0, tpot_slo_s=1.0, start_s=1.0,
+                first_token_s=2.0, finish_s=4.0, generated=4, **base)
+    assert r.slo_met
+    assert r.ttft_deadline_s == 3.0
+    # TTFT blown
+    late = Request("b", 1.0, ttft_slo_s=0.5, start_s=1.0,
+                   first_token_s=2.0, finish_s=4.0, generated=4, **base)
+    assert not late.slo_met
+    # TPOT blown
+    slow = Request("c", 1.0, tpot_slo_s=0.1, start_s=1.0,
+                   first_token_s=2.0, finish_s=14.0, generated=4, **base)
+    assert not slow.slo_met
+    # shed / unfinished are always misses
+    shed = Request("d", 1.0, shed=True, **base)
+    assert not shed.slo_met
+    unfin = Request("e", 1.0, **base)
+    assert not unfin.slo_met
+    # finished request with no SLO counts as met
+    free = Request("f", 1.0, start_s=1.0, first_token_s=2.0,
+                   finish_s=4.0, generated=4, **base)
+    assert free.slo_met
+
+
+# ---------------------------------------------------------------------------
+# A/B bit-equality helper
+# ---------------------------------------------------------------------------
+def test_streams_bit_exact_guards():
+    base = dict(prompt=np.array([1]), max_new_tokens=2, dataset="s")
+    served = Request("a", 0.0, output_tokens=np.array([3, 4]), **base)
+    # output_tokens defaults to None -> clear error, not a TypeError
+    unset = Request("b", 0.0, **base)
+    assert unset.output_tokens is None
+    with pytest.raises(ValueError, match="no committed output stream"):
+        streams_bit_exact([unset], [np.array([3, 4])])
+    # shed requests are skipped (they never produced a stream)
+    shed = Request("c", 0.0, shed=True, **base)
+    assert streams_bit_exact([served, shed],
+                             [np.array([3, 4]), np.array([9])])
+    # mismatched stream -> False; mismatched population -> error
+    assert not streams_bit_exact([served], [np.array([3, 5])])
+    with pytest.raises(ValueError, match="mismatched populations"):
+        streams_bit_exact([served], [])
