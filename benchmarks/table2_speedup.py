@@ -9,7 +9,6 @@ the paper's Llama pool).  Output: CSV rows batch,method,ratio.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import numpy as np

@@ -1,0 +1,30 @@
+"""speclint — static analysis enforcing SpecRouter's hot-path invariants.
+
+PRs 3-6 bought their wins by imposing contracts the code cannot see being
+broken at runtime until a benchmark regresses: the one-host-transfer-per-
+cycle contract of the fused executor, jit donation through
+``StateManager.checkout/commit``, static shapes per (chain, window | tree)
+group, and the no-``PRNGKey(<literal>)`` RNG discipline.  This package
+checks them at lint time, before any benchmark runs, in three tiers:
+
+  * AST tier (``ast_rules``, ``meta_rules``) — whole-tree source checks:
+    host-sync hazards in hot-path modules, RNG-key discipline, broad
+    ``except`` in serving paths, mutable-default / dataclass-pytree
+    hygiene, and the kernel/oracle-parity meta rule.
+  * jaxpr tier (``jaxpr_rules``) — traces the registered device-program
+    entry points (fused cycle builders, kernel ``ops`` wrappers) and
+    asserts no host-callback primitives sneak into the traced programs
+    and that every donated buffer has a same-shaped output to alias.
+  * HLO tier (``hlo_rules``, ``pallas_bounds``) — compiles the fused
+    linear cycle and checks the optimized HLO (no collectives, no host
+    transfer ops) plus a RUNTIME conformance pass that the one-transfer-
+    per-cycle contract holds; and symbolically evaluates every Pallas
+    kernel's BlockSpec index maps over its full grid against the operand
+    shapes.
+
+CLI:  ``python -m repro.analysis.speclint src/ tests/``
+Inline suppression:  ``# speclint: disable=<rule> -- <required reason>``
+Baseline: ``speclint-baseline.json`` at the repo root grandfathers
+pre-existing findings (each entry needs a written justification).
+"""
+from .findings import Finding, Baseline, collect_suppressions  # noqa: F401

@@ -1,0 +1,395 @@
+"""Tier-1 AST rules: whole-tree source checks.
+
+Rules and scopes (paths are matched as posix suffixes/substrings so the
+same rules work on fixture trees in tests):
+
+* ``host-sync``       — hot-path modules (``core/executor.py``,
+  ``core/chain_router.py``, ``models/*``).  Module-wide: ``jax.device_get``
+  and ``.item()`` (the per-op processors intentionally sync via
+  ``np.asarray``/``block_until_ready`` and bill the profiler's
+  ``host_sync`` counter, so those are only banned inside *traced* code).
+  Inside traced scope additionally: ``np.asarray``/``np.array``,
+  ``block_until_ready``, non-constant ``float()``/``int()``/``bool()``,
+  and ``if``/``while`` conditions that call into ``jnp``/``jax``
+  (tracer-bool → silent recompile or ConcretizationTypeError).
+* ``rng-literal-key`` — library code: ``PRNGKey(<constant>)``.  Fresh
+  entropy must flow in from the caller and through ``split`` (PR 5's
+  ``_req_rng`` footgun).
+* ``rng-key-reuse``   — library code: the same key variable fed to two or
+  more samplers in one function without ever being ``split``/``fold_in``.
+* ``broad-except``    — serving paths (``core/``, ``models/``): bare
+  ``except``, ``except Exception``, ``except BaseException``.
+* ``mutable-default`` — library code: mutable literal defaults on
+  function parameters.
+* ``dataclass-pytree`` — library code: dataclass fields with a ``None``
+  default under a non-``Optional`` annotation (implicit Optional breaks
+  pytree-leaf typing), or mutable literal defaults.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import Dict, Iterable, List, Sequence, Set
+
+from .findings import Finding
+
+HOT_PATH_SUFFIXES = ("core/executor.py", "core/chain_router.py")
+HOT_PATH_DIRS = ("models/",)
+SERVING_DIRS = ("core/", "models/", "serving/")
+LIBRARY_EXCLUDE_DIRS = ("tests/", "benchmarks/", "analysis/", "scripts/")
+
+# Call sites whose function-valued arguments are traced by JAX.
+_TRACING_FUNCS = {
+    "jit", "pallas_call", "scan", "while_loop", "fori_loop", "cond",
+    "switch", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "remat", "make_jaxpr", "eval_shape", "associative_scan",
+}
+_SAMPLERS = {
+    "categorical", "uniform", "normal", "bernoulli", "gumbel", "choice",
+    "randint", "truncated_normal", "exponential", "laplace", "dirichlet",
+}
+
+
+def _posix(path: str) -> str:
+    return str(PurePosixPath(path.replace("\\", "/")))
+
+
+def is_hot_path(path: str) -> bool:
+    p = _posix(path)
+    return p.endswith(HOT_PATH_SUFFIXES) or any(
+        f"/{d}" in p or p.startswith(d) for d in HOT_PATH_DIRS
+    )
+
+
+def is_serving(path: str) -> bool:
+    p = _posix(path)
+    return any(f"/{d}" in p or p.startswith(d) for d in SERVING_DIRS)
+
+
+def is_library(path: str) -> bool:
+    p = _posix(path)
+    if not p.endswith(".py"):
+        return False
+    return not any(f"/{d}" in p or p.startswith(d) for d in LIBRARY_EXCLUDE_DIRS)
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name for Name/Attribute chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _tail(chain: str) -> str:
+    return chain.rsplit(".", 1)[-1] if chain else ""
+
+
+def _line(source_lines: Sequence[str], lineno: int) -> str:
+    if 1 <= lineno <= len(source_lines):
+        return source_lines[lineno - 1]
+    return ""
+
+
+def _collect_traced_functions(tree: ast.Module) -> Set[ast.AST]:
+    """Function/lambda nodes whose bodies run under a JAX trace.
+
+    Detected structurally, no name heuristics: decorated with ``jit`` (or
+    ``partial(jit, ...)``), or passed by name / inline into a tracing call
+    site (``jax.jit(body, ...)``, ``lax.scan(step, ...)``,
+    ``pl.pallas_call(kernel, ...)``, ``partial(kernel, ...)`` inside one).
+    """
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    traced: Set[ast.AST] = set()
+
+    def _is_tracing_callee(func: ast.AST) -> bool:
+        return _tail(_attr_chain(func)) in _TRACING_FUNCS
+
+    def _mark_arg(arg: ast.AST) -> None:
+        if isinstance(arg, ast.Name):
+            for d in defs.get(arg.id, []):
+                traced.add(d)
+        elif isinstance(arg, ast.Lambda):
+            traced.add(arg)
+        elif isinstance(arg, ast.Call) and _tail(_attr_chain(arg.func)) == "partial":
+            for sub in arg.args:
+                _mark_arg(sub)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                chain = _attr_chain(dec)
+                if _tail(chain) in ("jit", "pallas_call"):
+                    traced.add(node)
+                elif isinstance(dec, ast.Call):
+                    dchain = _attr_chain(dec.func)
+                    if _tail(dchain) in ("jit", "pallas_call"):
+                        traced.add(node)
+                    elif _tail(dchain) == "partial" and dec.args:
+                        if _is_tracing_callee(dec.args[0]):
+                            traced.add(node)
+        elif isinstance(node, ast.Call) and _is_tracing_callee(node.func):
+            for arg in node.args:
+                _mark_arg(arg)
+            for kw in node.keywords:
+                if kw.arg in (None, "body_fun", "cond_fun", "f", "fun", "kernel"):
+                    _mark_arg(kw.value)
+    return traced
+
+
+def _walk_own_scope(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body without descending into nested defs/lambdas
+    (each nested def gets its own key-reuse pass)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _calls_into_jax(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = _attr_chain(sub.func)
+            root = chain.split(".", 1)[0]
+            if root in ("jnp", "jax", "lax"):
+                return True
+    return False
+
+
+class _ModuleScan:
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = _posix(path)
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.findings: List[Finding] = []
+
+    def emit(self, rule: str, node: ast.AST, message: str) -> None:
+        lineno = getattr(node, "lineno", 0)
+        self.findings.append(
+            Finding(
+                rule=rule,
+                path=self.path,
+                line=lineno,
+                message=message,
+                snippet=_line(self.lines, lineno),
+            )
+        )
+
+    # -- host-sync ---------------------------------------------------------
+
+    def check_host_sync(self) -> None:
+        if not is_hot_path(self.path):
+            return
+        traced = _collect_traced_functions(self.tree)
+        traced_nodes: Set[ast.AST] = set()
+        for fn in traced:
+            traced_nodes.update(ast.walk(fn))
+
+        for node in ast.walk(self.tree):
+            in_traced = node in traced_nodes
+            if isinstance(node, ast.Call):
+                chain = _attr_chain(node.func)
+                tail = _tail(chain)
+                if tail == "device_get":
+                    self.emit(
+                        "host-sync", node,
+                        "jax.device_get in a hot-path module forces a "
+                        "device→host sync; route results through the "
+                        "FusedSummary transfer point",
+                    )
+                elif tail == "item" and isinstance(node.func, ast.Attribute):
+                    self.emit(
+                        "host-sync", node,
+                        ".item() blocks on device compute; keep scalars "
+                        "on device or batch them into the cycle summary",
+                    )
+                elif in_traced:
+                    if chain in ("np.asarray", "np.array", "numpy.asarray",
+                                 "numpy.array", "onp.asarray", "onp.array"):
+                        self.emit(
+                            "host-sync", node,
+                            f"{chain} inside traced code materializes a "
+                            "tracer on host; use jnp instead",
+                        )
+                    elif tail == "block_until_ready":
+                        self.emit(
+                            "host-sync", node,
+                            "block_until_ready inside traced code is a "
+                            "host sync hazard",
+                        )
+                    elif (
+                        isinstance(node.func, ast.Name)
+                        and node.func.id in ("float", "int", "bool")
+                        and len(node.args) == 1
+                        and not isinstance(node.args[0], ast.Constant)
+                    ):
+                        self.emit(
+                            "host-sync", node,
+                            f"{node.func.id}() on a traced value forces "
+                            "concretization (host sync or trace error)",
+                        )
+            elif isinstance(node, (ast.If, ast.While)) and in_traced:
+                if _calls_into_jax(node.test):
+                    self.emit(
+                        "host-sync", node,
+                        "branching on a jnp/jax expression inside traced "
+                        "code concretizes a tracer; use lax.cond/jnp.where",
+                    )
+
+    # -- RNG discipline ----------------------------------------------------
+
+    def check_rng(self) -> None:
+        if not is_library(self.path):
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                if _tail(_attr_chain(node.func)) == "PRNGKey" and node.args:
+                    if isinstance(node.args[0], ast.Constant):
+                        self.emit(
+                            "rng-literal-key", node,
+                            "PRNGKey(<literal>) in library code: every call "
+                            "site draws the same stream; take a key argument "
+                            "and split it",
+                        )
+        # key reuse: same key Name fed to >= 2 samplers in one function,
+        # never split/fold_in in that function.
+        for fn in ast.walk(self.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            sampler_uses: Dict[str, List[ast.Call]] = {}
+            split_names: Set[str] = set()
+            for node in _walk_own_scope(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                tail = _tail(_attr_chain(node.func))
+                if tail in _SAMPLERS and node.args \
+                        and isinstance(node.args[0], ast.Name):
+                    sampler_uses.setdefault(node.args[0].id, []).append(node)
+                elif tail in ("split", "fold_in") and node.args \
+                        and isinstance(node.args[0], ast.Name):
+                    split_names.add(node.args[0].id)
+            for name, uses in sampler_uses.items():
+                if len(uses) >= 2 and name not in split_names:
+                    self.emit(
+                        "rng-key-reuse", uses[1],
+                        f"key '{name}' feeds {len(uses)} samplers in "
+                        f"'{fn.name}' without a split; correlated draws",
+                    )
+
+    # -- broad except ------------------------------------------------------
+
+    def check_broad_except(self) -> None:
+        if not is_serving(self.path):
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ExceptHandler):
+                if node.type is None:
+                    self.emit(
+                        "broad-except", node,
+                        "bare 'except:' in a serving path hides scheduler "
+                        "and state-manager bugs; catch the expected types "
+                        "or use try/finally for cleanup",
+                    )
+                else:
+                    chain = _tail(_attr_chain(node.type))
+                    if chain in ("Exception", "BaseException"):
+                        self.emit(
+                            "broad-except", node,
+                            f"'except {chain}' in a serving path; catch the "
+                            "expected types or use try/finally for cleanup",
+                        )
+
+    # -- defaults hygiene --------------------------------------------------
+
+    def check_defaults(self) -> None:
+        if not is_library(self.path):
+            return
+        dataclass_bodies: Set[ast.AST] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ClassDef):
+                for dec in node.decorator_list:
+                    chain = _attr_chain(dec if not isinstance(dec, ast.Call)
+                                        else dec.func)
+                    if _tail(chain) in ("dataclass", "register_dataclass"):
+                        dataclass_bodies.update(node.body)
+
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                args = node.args
+                for default in list(args.defaults) + [
+                    d for d in args.kw_defaults if d is not None
+                ]:
+                    if isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                        isinstance(default, ast.Call)
+                        and isinstance(default.func, ast.Name)
+                        and default.func.id in ("list", "dict", "set")
+                    ):
+                        self.emit(
+                            "mutable-default", default,
+                            "mutable default argument is shared across "
+                            "calls; use None + initialize inside",
+                        )
+            elif isinstance(node, ast.AnnAssign) and node in dataclass_bodies:
+                if node.value is None:
+                    continue
+                ann = ast.unparse(node.annotation)
+                if isinstance(node.value, ast.Constant) \
+                        and node.value.value is None:
+                    if "Optional" not in ann and "None" not in ann \
+                            and ann != "Any" and not ann.startswith("object"):
+                        self.emit(
+                            "dataclass-pytree", node,
+                            f"dataclass field annotated '{ann}' defaults to "
+                            "None (implicit Optional): pytree leaves change "
+                            "type depending on construction; annotate "
+                            f"Optional[{ann}]",
+                        )
+                elif isinstance(node.value, (ast.List, ast.Dict, ast.Set)):
+                    self.emit(
+                        "dataclass-pytree", node,
+                        "mutable literal default on a dataclass field; use "
+                        "field(default_factory=...)",
+                    )
+
+
+def run_file(path: str, source: str) -> List[Finding]:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [
+            Finding(
+                rule="parse-error",
+                path=_posix(path),
+                line=e.lineno or 0,
+                message=f"cannot parse: {e.msg}",
+            )
+        ]
+    scan = _ModuleScan(path, source, tree)
+    scan.check_host_sync()
+    scan.check_rng()
+    scan.check_broad_except()
+    scan.check_defaults()
+    return scan.findings
+
+
+def run(files: Iterable) -> List[Finding]:
+    """files: iterable of (path, source) pairs or Path objects."""
+    findings: List[Finding] = []
+    for item in files:
+        if isinstance(item, tuple):
+            path, source = item
+        else:
+            path, source = str(item), item.read_text()
+        findings.extend(run_file(path, source))
+    return findings

@@ -1,0 +1,182 @@
+"""Finding/suppression/baseline core for speclint.
+
+A finding is (rule, path, line, message).  Two escape hatches exist and
+both require a written reason:
+
+* inline: ``# speclint: disable=<rule>[,<rule>...] -- <reason>`` on the
+  offending line, or on a comment line directly above it;
+* baseline: an entry in ``speclint-baseline.json`` keyed by a fingerprint
+  that is robust to line drift (rule + path + normalized source line).
+
+A suppression without a reason is itself a finding (rule
+``bad-suppression`` / ``bad-baseline``), so the escape hatch cannot rot
+into a silent off switch.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*speclint:\s*disable=([A-Za-z0-9_,\- ]+?)\s*(?:--\s*(.*))?$"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str  # repo-relative posix path (or a synthetic anchor for dynamic tiers)
+    line: int  # 1-based; 0 for whole-file / dynamic findings
+    message: str
+    snippet: str = ""  # normalized source line, used for fingerprinting
+
+    def fingerprint(self) -> str:
+        norm = " ".join(self.snippet.split()) if self.snippet else f"L{self.line}"
+        digest = hashlib.sha1(
+            f"{self.rule}|{self.path}|{norm}".encode("utf-8")
+        ).hexdigest()
+        return digest[:16]
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class Suppression:
+    rules: Tuple[str, ...]
+    reason: str
+    line: int  # line the comment sits on
+
+
+def collect_suppressions(
+    source: str, path: str
+) -> Tuple[Dict[int, Suppression], List[Finding]]:
+    """Scan ``source`` for inline suppression comments.
+
+    Returns a map from *effective* line number -> Suppression, plus any
+    findings for malformed suppressions (missing reason).  A suppression
+    on a standalone comment line also covers the next non-comment line.
+    """
+    by_line: Dict[int, Suppression] = {}
+    findings: List[Finding] = []
+    lines = source.splitlines()
+    for idx, text in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        reason = (m.group(2) or "").strip()
+        if not reason:
+            findings.append(
+                Finding(
+                    rule="bad-suppression",
+                    path=path,
+                    line=idx,
+                    message=(
+                        "speclint suppression without a reason; write "
+                        "'# speclint: disable=<rule> -- <why this is safe>'"
+                    ),
+                    snippet=text,
+                )
+            )
+            continue
+        sup = Suppression(rules=rules, reason=reason, line=idx)
+        by_line[idx] = sup
+        stripped = text.strip()
+        if stripped.startswith("#"):
+            # Standalone comment: extend coverage to the next code line.
+            for nxt in range(idx + 1, len(lines) + 1):
+                nxt_text = lines[nxt - 1].strip()
+                if nxt_text and not nxt_text.startswith("#"):
+                    by_line.setdefault(nxt, sup)
+                    break
+    return by_line, findings
+
+
+def apply_suppressions(
+    findings: Sequence[Finding], suppressions: Dict[str, Dict[int, Suppression]]
+) -> List[Finding]:
+    """Drop findings covered by an inline suppression for their rule."""
+    kept: List[Finding] = []
+    for f in findings:
+        sup = suppressions.get(f.path, {}).get(f.line)
+        if sup is not None and (f.rule in sup.rules or "all" in sup.rules):
+            continue
+        kept.append(f)
+    return kept
+
+
+@dataclass
+class Baseline:
+    """Checked-in grandfather list for pre-existing findings."""
+
+    entries: Dict[str, dict] = field(default_factory=dict)  # fingerprint -> entry
+    path: Optional[Path] = None
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls(path=path)
+        data = json.loads(path.read_text())
+        entries = {e["fingerprint"]: e for e in data.get("findings", [])}
+        return cls(entries=entries, path=path)
+
+    def validate(self) -> List[Finding]:
+        """Baseline entries without a justification are findings themselves."""
+        bad: List[Finding] = []
+        for fp, entry in sorted(self.entries.items()):
+            if not str(entry.get("reason", "")).strip():
+                bad.append(
+                    Finding(
+                        rule="bad-baseline",
+                        path=str(self.path) if self.path else "speclint-baseline.json",
+                        line=0,
+                        message=(
+                            f"baseline entry {fp} ({entry.get('rule', '?')} in "
+                            f"{entry.get('path', '?')}) has no written justification"
+                        ),
+                    )
+                )
+        return bad
+
+    def filter(self, findings: Sequence[Finding]) -> Tuple[List[Finding], List[str]]:
+        """Split findings into (new, matched-fingerprints)."""
+        new: List[Finding] = []
+        matched: List[str] = []
+        for f in findings:
+            fp = f.fingerprint()
+            if fp in self.entries:
+                matched.append(fp)
+            else:
+                new.append(f)
+        return new, matched
+
+    def stale(self, matched: Sequence[str]) -> List[str]:
+        return sorted(set(self.entries) - set(matched))
+
+    @staticmethod
+    def write(path: Path, findings: Sequence[Finding]) -> None:
+        payload = {
+            "_comment": (
+                "speclint grandfathered findings. Every entry must carry a "
+                "written reason; remove entries as the findings are fixed."
+            ),
+            "findings": [
+                {
+                    "fingerprint": f.fingerprint(),
+                    "rule": f.rule,
+                    "path": f.path,
+                    "message": f.message,
+                    "reason": "",
+                }
+                for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+            ],
+        }
+        path.write_text(json.dumps(payload, indent=2) + "\n")

@@ -1,0 +1,151 @@
+"""Shared harness for speclint's dynamic tiers (jaxpr / HLO).
+
+Builds a deliberately tiny two-model pool (the fused program's *structure*
+— transfer points, donation, primitives — is size-independent), runs a
+fused generate through the real ``ChainRouter``/``Executor`` serving path,
+and captures the un-jitted fused-cycle body plus the abstract shapes of
+its first invocation.  Everything downstream (``jax.make_jaxpr``,
+``jax.jit(...).lower()``) runs on those captures, so the checks see the
+exact program production code would run for this chain group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+DEFAULT_CHAIN = ("lintd", "lintt")
+DEFAULT_WINDOW = 3
+DONATE_ARGNUMS = (1, 2, 3, 6)  # states, seq, seq_len, active — executor contract
+
+
+def tiny_pool():
+    """Two dense models small enough that jit + a few cycles stay in
+    seconds on CPU."""
+    import jax.numpy as jnp
+
+    from repro.core import ModelPool
+    from repro.models import ModelConfig
+    from repro.models.model import LanguageModel
+
+    p = ModelPool()
+    for (n, L, d, s) in [("lintd", 2, 32, 1), ("lintt", 2, 48, 2)]:
+        cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
+                          d_model=d, num_heads=4, num_kv_heads=2,
+                          d_ff=2 * d, vocab_size=61, dtype=jnp.float32)
+        lm = LanguageModel(cfg)
+        params, axes = lm.init(jax.random.PRNGKey(s))
+        p.register(cfg, params=params, param_axes=axes)
+    return p
+
+
+@dataclasses.dataclass
+class FusedCapture:
+    body: Callable            # un-jitted fused-cycle body
+    prog: Any                 # the jitted program the serving path ran
+    arg_sds: Tuple[Any, ...]  # ShapeDtypeStruct pytree of the real args
+    chain: Tuple[str, ...]
+    router: Any               # the ChainRouter that drove the capture
+    pool: Any
+
+
+def _to_sds(x: Any) -> Any:
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype)
+    return jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype)
+
+
+def capture_fused_linear(
+    chain: Tuple[str, ...] = DEFAULT_CHAIN,
+    window: int = DEFAULT_WINDOW,
+    budget: int = 10,
+) -> FusedCapture:
+    """Drive a fused linear generate on the tiny pool, capturing the fused
+    body + concrete arg shapes on the first fused cycle."""
+    from repro.core import ChainRouter
+    from repro.core.executor import Executor
+
+    pool = tiny_pool()
+    captured: Dict[str, Any] = {}
+    orig = Executor._fused_program
+
+    def spy(self, chain_, window_, tree, greedy, temperature,
+            prefix_width, eos):
+        prog = orig(self, chain_, window_, tree, greedy, temperature,
+                    prefix_width, eos)
+        if tree is not None or "body" in captured:
+            return prog
+        lms = [self.pool.model(m) for m in chain_]
+        body = self._build_fused_linear(lms, window_, greedy, temperature,
+                                        prefix_width, eos)
+
+        def wrapper(*args):
+            if "arg_sds" not in captured:
+                captured["arg_sds"] = jax.tree.map(_to_sds, args)
+                captured["body"] = body
+                captured["prog"] = prog
+                captured["chain"] = tuple(chain_)
+            return prog(*args)
+
+        return wrapper
+
+    Executor._fused_program = spy
+    try:
+        prompt = np.array(jax.random.randint(
+            jax.random.PRNGKey(0), (2, 5), 0, 61))
+        plens = np.array([5, 4])
+        router = ChainRouter(pool, chain[-1], greedy=True, adaptive=False,
+                             fixed_chain=tuple(chain), fixed_window=window,
+                             fused=True, profile_every=1000)
+        router.generate(prompt, plens, budget, request_id="speclint")
+    finally:
+        Executor._fused_program = orig
+
+    if "body" not in captured:
+        raise RuntimeError(
+            "fused capture failed: the router never entered the fused path "
+            f"for chain {chain} (window {window})")
+    return FusedCapture(body=captured["body"], prog=captured["prog"],
+                        arg_sds=captured["arg_sds"],
+                        chain=captured["chain"], router=router, pool=pool)
+
+
+def kernel_op_entry_points() -> List[Tuple[str, Callable, Tuple[Any, ...]]]:
+    """(name, callable, abstract args) for every public kernels.ops
+    wrapper — the jaxpr tier traces these alongside the fused body."""
+    import jax.numpy as jnp
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    B, H, Hkv, D, S, T, V, R = 2, 4, 2, 16, 32, 3, 61, 8
+    bs, Rb = 8, 4
+    from repro.kernels import ops
+
+    return [
+        ("ops.dtv",
+         lambda a, b: ops.dtv(a, b),
+         (sds((R, V), f32), sds((R, V), f32))),
+        ("ops.verify_row_stats",
+         lambda l, c: ops.verify_row_stats(l, c),
+         (sds((R, V), f32), sds((R,), i32))),
+        ("ops.draft_topk",
+         lambda l: ops.draft_topk(l, 4),
+         (sds((R, V), f32),)),
+        ("ops.masked_decode_attention",
+         lambda q, k, v, m: ops.masked_decode_attention(q, k, v, m),
+         (sds((B, H, D), f32), sds((B, S, Hkv, D), f32),
+          sds((B, S, Hkv, D), f32), sds((B, S), jnp.bool_))),
+        ("ops.masked_tree_attention",
+         lambda q, k, v, m: ops.masked_tree_attention(q, k, v, m),
+         (sds((B, T, H, D), f32), sds((B, S, Hkv, D), f32),
+          sds((B, S, Hkv, D), f32), sds((B, T, S), jnp.bool_))),
+        ("ops.paged_decode_attention",
+         lambda q, kf, vf, t, m: ops.paged_decode_attention(
+             q, kf, vf, t, m, block_size=bs),
+         (sds((B, T, H, D), f32), sds((Rb * 2 * bs, Hkv, D), f32),
+          sds((Rb * 2 * bs, Hkv, D), f32), sds((B, Rb), i32),
+          sds((B, T, Rb * bs), jnp.bool_))),
+    ]

@@ -1,0 +1,176 @@
+"""Tier-3 HLO rules: inspect the COMPILED fused-cycle program and verify
+the one-host-transfer-per-cycle contract end to end.
+
+Static half — compile the captured fused linear body and reuse
+``launch/hlo_analysis.py``:
+  * ``hlo-collectives``    — a single-device fused cycle must contain no
+    collective ops (one sneaking in means sharding annotations leaked
+    into the serving path);
+  * ``hlo-host-transfer``  — no infeed/outfeed/send/recv or host
+    custom-calls inside the compiled program (transfers inside the
+    program would not even show up in the profiler's host_sync counter).
+
+Runtime half — drive a ``RouterSession`` on the tiny pool and, for each
+fused cycle, count actual ``jax.device_get`` calls under
+``jax.transfer_guard_device_to_host("disallow")`` (which turns any
+*implicit* device→host transfer into an error while letting the one
+sanctioned explicit FusedSummary transfer through):
+  * ``runtime-transfer-per-cycle`` — a fused cycle performed != 1
+    explicit transfer, or any implicit transfer at all.  This is the
+    check that fails the build if the compiled fused linear cycle exceeds
+    one host transfer per cycle.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from . import harness
+from .findings import Finding
+
+_EXECUTOR_PATH = "src/repro/core/executor.py"
+
+HOST_TRANSFER_OPS = ("infeed", "outfeed", "send", "recv",
+                     "send-done", "recv-done")
+HOST_CUSTOM_CALL_MARKERS = ("MoveToHost", "MoveToDevice", "HostExecute",
+                            "xla_ffi_host")
+
+
+def check_compiled_program(cap: harness.FusedCapture) -> List[Finding]:
+    from repro.launch import hlo_analysis
+
+    findings: List[Finding] = []
+    jitted = jax.jit(cap.body, donate_argnums=harness.DONATE_ARGNUMS)
+    try:
+        text = jitted.lower(*cap.arg_sds).compile().as_text()
+    except Exception as e:
+        return [Finding(
+            rule="hlo-compile-error", path=_EXECUTOR_PATH, line=0,
+            message=(f"could not compile fused body: "
+                     f"{type(e).__name__}: {e}"),
+            snippet="fused_linear:compile",
+        )]
+
+    stats = hlo_analysis.analyze(text)
+    if stats["collective_bytes"] > 0:
+        bad = {k: v for k, v in stats["collectives"].items() if v > 0}
+        findings.append(Finding(
+            rule="hlo-collectives", path=_EXECUTOR_PATH, line=0,
+            message=(f"compiled fused linear cycle contains collectives "
+                     f"{bad} on a single-device serving path"),
+            snippet="fused_linear:collectives",
+        ))
+
+    comps = hlo_analysis.parse_hlo(text)
+    hits = []
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op in HOST_TRANSFER_OPS:
+                hits.append(f"{cname}:{ins.op}")
+            elif ins.op == "custom-call" and any(
+                    m in ins.rest for m in HOST_CUSTOM_CALL_MARKERS):
+                hits.append(f"{cname}:custom-call(host)")
+    if hits:
+        findings.append(Finding(
+            rule="hlo-host-transfer", path=_EXECUTOR_PATH, line=0,
+            message=("compiled fused linear cycle contains host transfer "
+                     f"ops: {sorted(set(hits))[:5]} — transfers inside "
+                     "the program bypass the FusedSummary contract"),
+            snippet="fused_linear:host-transfer",
+        ))
+    return findings
+
+
+@contextlib.contextmanager
+def _count_device_get():
+    counter = {"n": 0}
+    real = jax.device_get
+
+    def counting(x):
+        counter["n"] += 1
+        return real(x)
+
+    jax.device_get = counting
+    try:
+        yield counter
+    finally:
+        jax.device_get = real
+
+
+def check_runtime_transfers(cap: Optional[harness.FusedCapture] = None,
+                            cycles: int = 3) -> List[Finding]:
+    """Per-cycle conformance on the real serving path: each fused cycle
+    must perform exactly one explicit device→host transfer (the
+    FusedSummary device_get) and zero implicit ones."""
+    from repro.core.chain_router import RouterSession
+
+    findings: List[Finding] = []
+    pool = cap.pool if cap is not None else harness.tiny_pool()
+    router_cls = type(cap.router) if cap is not None else None
+    if router_cls is None:
+        from repro.core import ChainRouter
+        router_cls = ChainRouter
+    chain = cap.chain if cap is not None else harness.DEFAULT_CHAIN
+    router = router_cls(pool, chain[-1], greedy=True, adaptive=False,
+                        fixed_chain=tuple(chain),
+                        fixed_window=harness.DEFAULT_WINDOW, fused=True,
+                        profile_every=10_000)
+    sess = RouterSession(router, num_slots=2, max_len=96,
+                         session_id="speclint")
+    prompt = np.array(jax.random.randint(
+        jax.random.PRNGKey(1), (2, 5), 0, 61))
+    sess.admit(0, prompt[0], 64)
+    sess.admit(1, prompt[1][:4], 64)
+    sess.run_cycle()  # cycle 0 is the per-op profiling cycle (intentional
+    #                   host syncs feed the scheduler); fused from cycle 1
+
+    for i in range(cycles):
+        if not sess.active.any():
+            break
+        syncs0 = router.profiler.counters.get("host_sync", 0)
+        try:
+            with _count_device_get() as dg, \
+                    jax.transfer_guard_device_to_host("disallow"):
+                sess.run_cycle()
+        except Exception as e:
+            findings.append(Finding(
+                rule="runtime-transfer-per-cycle", path=_EXECUTOR_PATH,
+                line=0,
+                message=(f"fused cycle {i + 1} performed an implicit "
+                         "device→host transfer (transfer guard tripped): "
+                         f"{type(e).__name__}: {e}"),
+                snippet=f"fused_cycle:implicit-transfer:{i}",
+            ))
+            break
+        syncs = router.profiler.counters.get("host_sync", 0) - syncs0
+        if dg["n"] != 1 or syncs != 1:
+            findings.append(Finding(
+                rule="runtime-transfer-per-cycle", path=_EXECUTOR_PATH,
+                line=0,
+                message=(f"fused cycle {i + 1}: expected exactly 1 host "
+                         f"transfer, saw {dg['n']} device_get calls / "
+                         f"{syncs} host_sync counts — the one-transfer-"
+                         "per-cycle contract (PR 5) is broken"),
+                snippet=f"fused_cycle:transfer-count:{dg['n']}:{syncs}",
+            ))
+            break
+    return findings
+
+
+def run(cap: Optional[harness.FusedCapture] = None) -> List[Finding]:
+    if cap is None:
+        try:
+            cap = harness.capture_fused_linear()
+        except Exception as e:
+            return [Finding(
+                rule="hlo-compile-error", path=_EXECUTOR_PATH, line=0,
+                message=("could not capture the fused linear cycle: "
+                         f"{type(e).__name__}: {e}"),
+                snippet="fused_linear:capture",
+            )]
+    findings = check_compiled_program(cap)
+    findings.extend(check_runtime_transfers(cap))
+    return findings

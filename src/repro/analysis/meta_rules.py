@@ -1,0 +1,134 @@
+"""Meta rule: every Pallas kernel exports a jnp oracle and a parity test.
+
+A "kernel launcher" is any function in ``kernels/*.py`` whose body calls
+``pallas_call``.  For each launcher we require:
+
+* an oracle function in ``kernels/ref.py`` — by convention
+  ``<name>_ref`` with the ``_pallas`` suffix stripped (an alias table
+  covers historically-named oracles), and
+* at least one test module that references the oracle by name (the
+  parity test that pins kernel output to the oracle).
+
+Rule ids: ``kernel-no-oracle``, ``kernel-no-parity-test``.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .ast_rules import _attr_chain, _tail
+from .findings import Finding
+
+# Launchers whose oracle does not follow the <base>_ref convention.
+ORACLE_ALIASES: Dict[str, str] = {
+    "paged_flash_decode_pallas": "paged_attention_ref",
+}
+
+# Helper/non-kernel functions in kernels/ that may call pallas_call but
+# are not themselves public launchers (none today; extend as needed).
+LAUNCHER_IGNORE: Tuple[str, ...] = ()
+
+
+def _functions_calling_pallas(tree: ast.Module) -> List[ast.FunctionDef]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and _tail(_attr_chain(sub.func)) == "pallas_call":
+                out.append(node)
+                break
+    return out
+
+
+def expected_oracle(launcher_name: str) -> str:
+    if launcher_name in ORACLE_ALIASES:
+        return ORACLE_ALIASES[launcher_name]
+    base = launcher_name
+    if base.endswith("_pallas"):
+        base = base[: -len("_pallas")]
+    return f"{base}_ref"
+
+
+def run(
+    kernel_files: Sequence[Tuple[str, str]],
+    ref_source: Optional[str],
+    test_files: Sequence[Tuple[str, str]],
+) -> List[Finding]:
+    """kernel_files / test_files: (path, source) pairs; ref_source: text of
+    kernels/ref.py (None if missing)."""
+    ref_names: set = set()
+    if ref_source is not None:
+        try:
+            for node in ast.walk(ast.parse(ref_source)):
+                if isinstance(node, ast.FunctionDef):
+                    ref_names.add(node.name)
+        except SyntaxError:
+            pass
+
+    findings: List[Finding] = []
+    for path, source in kernel_files:
+        if Path(path).name == "ref.py":
+            continue
+        try:
+            tree = ast.parse(source)
+        except SyntaxError:
+            continue  # ast tier reports parse errors
+        lines = source.splitlines()
+        for fn in _functions_calling_pallas(tree):
+            if fn.name in LAUNCHER_IGNORE or fn.name.startswith("__"):
+                continue
+            oracle = expected_oracle(fn.name)
+            snippet = lines[fn.lineno - 1] if fn.lineno <= len(lines) else ""
+            if oracle not in ref_names:
+                findings.append(
+                    Finding(
+                        rule="kernel-no-oracle",
+                        path=path,
+                        line=fn.lineno,
+                        message=(
+                            f"Pallas launcher '{fn.name}' has no jnp oracle "
+                            f"'{oracle}' in kernels/ref.py; every kernel "
+                            "needs a reference implementation"
+                        ),
+                        snippet=snippet,
+                    )
+                )
+                continue
+            tested = any(oracle in test_src for _, test_src in test_files)
+            if not tested:
+                findings.append(
+                    Finding(
+                        rule="kernel-no-parity-test",
+                        path=path,
+                        line=fn.lineno,
+                        message=(
+                            f"Pallas launcher '{fn.name}' has oracle "
+                            f"'{oracle}' but no test references it; add a "
+                            "kernel-vs-oracle parity test"
+                        ),
+                        snippet=snippet,
+                    )
+                )
+    return findings
+
+
+def load_and_run(src_roots: Iterable[Path], test_roots: Iterable[Path]) -> List[Finding]:
+    kernel_files: List[Tuple[str, str]] = []
+    ref_source: Optional[str] = None
+    for root in src_roots:
+        for p in sorted(root.rglob("kernels/*.py")):
+            text = p.read_text()
+            if p.name == "ref.py":
+                ref_source = text
+            else:
+                kernel_files.append((str(p), text))
+    test_files: List[Tuple[str, str]] = []
+    for root in test_roots:
+        for p in sorted(root.rglob("test_*.py")):
+            test_files.append((str(p), p.read_text()))
+    if not kernel_files:
+        return []
+    return run(kernel_files, ref_source, test_files)

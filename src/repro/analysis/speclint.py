@@ -1,0 +1,219 @@
+"""speclint CLI.
+
+    python -m repro.analysis.speclint src/ tests/
+    python -m repro.analysis.speclint src/ --tiers ast,meta,pallas
+    python -m repro.analysis.speclint src/ tests/ --write-baseline
+
+Exit codes: 0 clean, 1 findings, 2 internal error.
+
+Tiers:
+  ast     — source-level rules over every given .py file (fast)
+  meta    — kernel/oracle/parity-test coverage (fast)
+  pallas  — BlockSpec index-map bounds over full grids (seconds)
+  jaxpr   — trace fused cycle + kernels.ops, primitive/donation checks
+            (tens of seconds: jits a tiny pool)
+  hlo     — compile the fused cycle, HLO + runtime one-transfer-per-cycle
+            conformance (tens of seconds)
+
+Dynamic-tier findings anchor to the entry point's file with line 0; they
+cannot be inline-suppressed, only baselined.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from . import ast_rules, meta_rules
+from .findings import Baseline, Finding, apply_suppressions, collect_suppressions
+
+ALL_TIERS = ("ast", "meta", "pallas", "jaxpr", "hlo")
+
+RULE_DOCS = {
+    "host-sync": "host-sync hazards in hot-path modules (device_get, "
+                 ".item(), np.asarray/float()/tracer-bool inside traced code)",
+    "rng-literal-key": "PRNGKey(<literal>) in library code",
+    "rng-key-reuse": "same PRNG key fed to multiple samplers without split",
+    "broad-except": "bare/broad except in serving paths (core/, models/)",
+    "mutable-default": "mutable default argument",
+    "dataclass-pytree": "dataclass field hygiene (implicit Optional, "
+                        "mutable defaults)",
+    "kernel-no-oracle": "Pallas kernel without a jnp oracle in kernels/ref.py",
+    "kernel-no-parity-test": "Pallas kernel oracle never referenced by a test",
+    "pallas-oob": "BlockSpec index map escapes an operand over the grid",
+    "pallas-spec-arity": "BlockSpec rank/arity mismatch",
+    "pallas-driver-error": "bounds-check driver failed to run a launcher",
+    "jaxpr-callback": "host callback/infeed/outfeed primitive in a traced "
+                      "device program",
+    "jaxpr-donation": "donated buffer cannot alias an output",
+    "jaxpr-trace-error": "entry point failed to trace/lower",
+    "hlo-collectives": "collectives in the compiled single-device fused cycle",
+    "hlo-host-transfer": "host transfer ops inside the compiled fused cycle",
+    "hlo-compile-error": "fused cycle failed to compile",
+    "runtime-transfer-per-cycle": "a fused cycle made != 1 host transfer "
+                                  "(PR 5 contract)",
+    "bad-suppression": "inline suppression without a written reason",
+    "bad-baseline": "baseline entry without a written justification",
+    "parse-error": "file does not parse",
+}
+
+
+def _gather_files(paths: List[str]) -> List[Path]:
+    files: List[Path] = []
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    # dedupe, keep order
+    seen = set()
+    out = []
+    for f in files:
+        key = str(f)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def run_static_tiers(
+    files: List[Path], tiers: Tuple[str, ...]
+) -> Tuple[List[Finding], Dict[str, dict]]:
+    """AST + meta tiers plus suppression scanning.  Returns (findings
+    after inline suppression, suppression map)."""
+    sources: List[Tuple[str, str]] = []
+    suppressions: Dict[str, dict] = {}
+    findings: List[Finding] = []
+    for f in files:
+        try:
+            text = f.read_text()
+        except OSError as e:
+            findings.append(Finding(
+                rule="parse-error", path=str(f), line=0,
+                message=f"cannot read: {e}"))
+            continue
+        sources.append((str(f), text))
+        by_line, bad = collect_suppressions(text, str(f))
+        suppressions[str(f)] = by_line
+        findings.extend(bad)
+
+    if "ast" in tiers:
+        findings.extend(ast_rules.run(sources))
+    if "meta" in tiers:
+        kernel_files = [(p, s) for p, s in sources
+                        if "kernels/" in ast_rules._posix(p)
+                        and Path(p).name != "ref.py"]
+        ref_sources = [s for p, s in sources
+                       if ast_rules._posix(p).endswith("kernels/ref.py")]
+        test_files = [(p, s) for p, s in sources
+                      if Path(p).name.startswith("test_")]
+        if kernel_files:
+            findings.extend(meta_rules.run(
+                kernel_files, ref_sources[0] if ref_sources else None,
+                test_files))
+    return apply_suppressions(findings, suppressions), suppressions
+
+
+def run_dynamic_tiers(tiers: Tuple[str, ...], out=sys.stderr) -> List[Finding]:
+    findings: List[Finding] = []
+    if "pallas" in tiers:
+        from . import pallas_bounds
+        findings.extend(pallas_bounds.run())
+    cap = None
+    if "jaxpr" in tiers or "hlo" in tiers:
+        from . import harness
+        print("speclint: capturing fused cycle (jits a tiny pool)...",
+              file=out)
+        cap = harness.capture_fused_linear()
+    if "jaxpr" in tiers:
+        from . import jaxpr_rules
+        findings.extend(jaxpr_rules.run(cap))
+    if "hlo" in tiers:
+        from . import hlo_rules
+        findings.extend(hlo_rules.run(cap))
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="speclint",
+        description="Static + jaxpr/HLO analysis of SpecRouter's hot-path "
+                    "invariants.")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to scan (e.g. src/ tests/)")
+    ap.add_argument("--tiers", default="all",
+                    help="comma list of tiers to run: "
+                         f"{','.join(ALL_TIERS)} (default: all)")
+    ap.add_argument("--baseline", default="speclint-baseline.json",
+                    help="baseline file of grandfathered findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit "
+                         "(justifications must then be filled in by hand)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(RULE_DOCS):
+            print(f"{rule:28s} {RULE_DOCS[rule]}")
+        return 0
+
+    if args.tiers.strip() == "all":
+        tiers = ALL_TIERS
+    else:
+        tiers = tuple(t.strip() for t in args.tiers.split(",") if t.strip())
+        unknown = [t for t in tiers if t not in ALL_TIERS]
+        if unknown:
+            print(f"speclint: unknown tiers {unknown}; valid: "
+                  f"{','.join(ALL_TIERS)}", file=sys.stderr)
+            return 2
+
+    if not args.paths and any(t in tiers for t in ("ast", "meta")):
+        print("speclint: no paths given (try: src/ tests/)", file=sys.stderr)
+        return 2
+
+    try:
+        files = _gather_files(args.paths)
+        findings, _ = run_static_tiers(files, tiers)
+        findings.extend(run_dynamic_tiers(tiers))
+    except KeyboardInterrupt:
+        raise
+    except Exception:
+        traceback.print_exc()
+        print("speclint: internal error (this is a speclint bug, not a "
+              "finding)", file=sys.stderr)
+        return 2
+
+    baseline_path = Path(args.baseline)
+    if args.write_baseline:
+        Baseline.write(baseline_path, findings)
+        print(f"speclint: wrote {len(findings)} finding(s) to "
+              f"{baseline_path}; fill in each entry's 'reason' before "
+              "committing")
+        return 0
+
+    baseline = Baseline.load(baseline_path)
+    findings.extend(baseline.validate())
+    new, matched = baseline.filter(findings)
+    for fp in baseline.stale(matched):
+        entry = baseline.entries[fp]
+        print(f"speclint: stale baseline entry {fp} "
+              f"({entry.get('rule')} in {entry.get('path')}) — the finding "
+              "is gone, remove the entry", file=sys.stderr)
+
+    for f in sorted(new, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.format())
+    n_base = len(matched)
+    suffix = f" ({n_base} baselined)" if n_base else ""
+    if new:
+        print(f"speclint: {len(new)} finding(s){suffix}", file=sys.stderr)
+        return 1
+    print(f"speclint: clean{suffix} "
+          f"[tiers: {','.join(t for t in ALL_TIERS if t in tiers)}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

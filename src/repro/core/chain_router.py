@@ -1171,6 +1171,7 @@ class RouterSession:
                 return None          # needs the defrag/rebuild escape
         self._sync_device()
         rngs = tuple(r._next_rng() for _ in chain)
+        ok = False
         try:
             bufs, s = r.executor.fused_cycle(FusedCycleRequest(
                 chain=chain, request_id=self.session_id,
@@ -1180,14 +1181,17 @@ class RouterSession:
                 budget=self._dev["budget"], active=self._dev["active"],
                 gmask=jnp.asarray(gmask), rngs=rngs, greedy=r.greedy,
                 temperature=r.temperature))
-        except Exception:
-            # a runtime failure consumed the donated device buffers: drop
-            # them so a caller that survives the error re-uploads the
-            # (still-exact) host mirror instead of passing deleted arrays
-            # into the next program
-            self._dev = None
-            self._dev_stale = True
-            raise
+            ok = True
+        finally:
+            # on ANY failure (including KeyboardInterrupt) the donated
+            # device buffers may have been consumed: drop them so a caller
+            # that survives the error re-uploads the (still-exact) host
+            # mirror instead of passing deleted arrays into the next
+            # program.  try/finally, not a broad except: nothing is
+            # swallowed, cleanup runs for every exception type
+            if not ok:
+                self._dev = None
+                self._dev_stale = True
         self._dev.update(bufs)
         # --- mirror the one-transfer summary onto the host ----------------
         cnum = s.n_committed.astype(np.int64)

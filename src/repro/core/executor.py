@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -141,10 +141,10 @@ class ResolveTreeRequest:
     tree: TokenTree
     path_nodes: np.ndarray        # (B, D) winning root->leaf node ids
     keep_len: np.ndarray          # (B,) int32 — consensus depth to keep
-    active: np.ndarray = None     # (B,) bool — rows that appended a tree
-                                  # block this cycle (paged states must not
-                                  # touch the trailing slots of rows that
-                                  # sat the cycle out)
+    active: Optional[np.ndarray] = None   # (B,) bool — rows that appended
+                                  # a tree block this cycle (paged states
+                                  # must not touch the trailing slots of
+                                  # rows that sat the cycle out)
 
 
 @dataclasses.dataclass
@@ -490,6 +490,8 @@ class Executor:
             raise ValueError(
                 f"{op}: sampling requested without an rng — thread the "
                 "session RNG (ChainRouter._next_rng) through the request")
+        # speclint: disable=rng-literal-key -- greedy ops never read the
+        # key; this constant is a traced-signature stand-in, not a stream
         return jax.random.PRNGKey(0)
 
     def _draft_scan(self, model: str, window: int, greedy: bool,
@@ -925,29 +927,35 @@ class Executor:
                                    req.prefix_width, req.eos)
         states = self.states.checkout(sids)
         t0 = time.perf_counter()
+        ok = False
         try:
             out = prog(params, tuple(states), req.seq, req.seq_len,
                        req.prompt_len, req.budget, req.active, req.gmask,
                        tuple(req.rngs))
-        except Exception:
-            # trace-time failure: nothing executed, buffers still valid —
+            ok = True
+        finally:
+            # try/finally, not a broad except: nothing is swallowed and
+            # the cleanup also covers KeyboardInterrupt/SystemExit.
+            # Trace-time failure: nothing executed, buffers still valid —
             # restore them.  A RUNTIME failure after dispatch (e.g. device
             # OOM) has already consumed the donated buffers; committing
             # deleted arrays would poison every later op with confusing
             # "Array has been deleted" errors, so drop the registry
             # entries instead and let the next access fail cleanly.
-            donated = any(
-                getattr(leaf, "is_deleted", lambda: False)()
-                for st in states for leaf in jax.tree.leaves(st))
-            if donated:
-                for sid in sids:
-                    self.states.release(sid)
-            else:
-                self.states.commit(sids, states)
-            raise
+            if not ok:
+                donated = any(
+                    getattr(leaf, "is_deleted", lambda: False)()
+                    for st in states for leaf in jax.tree.leaves(st))
+                if donated:
+                    for sid in sids:
+                        self.states.release(sid)
+                else:
+                    self.states.commit(sids, states)
         new_states, seq, seq_len, active, summary = out
         self.states.commit(sids, list(new_states))
-        summary = jax.device_get(summary)     # THE one transfer per cycle
+        # speclint: disable=host-sync -- THE sanctioned one-transfer-per-
+        # cycle FusedSummary device_get (PR 5 contract; counted below)
+        summary = jax.device_get(summary)
         dt = time.perf_counter() - t0
         self.profiler.count("host_sync")
         self.profiler.record("fused_cycle", "+".join(req.chain), dt,

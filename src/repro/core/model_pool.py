@@ -13,7 +13,6 @@ import dataclasses
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import numpy as np
 
 from ..models.config import ModelConfig
 from ..models.model import LanguageModel

@@ -8,7 +8,7 @@ import collections
 import contextlib
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 
 class EMA:

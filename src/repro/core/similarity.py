@@ -12,10 +12,8 @@ from __future__ import annotations
 
 import itertools
 import math
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .profiler import EMA

@@ -24,14 +24,11 @@ each other), so ``maybe_defragment`` is a no-op for them.
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
-import jax.numpy as jnp
 import numpy as np
 
-from ..models.kv_cache import (ModelState, PagedModelState, blocks_in_use,
-                               fragmentation, defragment,
-                               free_rows as _free_rows)
+from ..models.kv_cache import (PagedModelState, blocks_in_use, fragmentation, defragment, free_rows as _free_rows)
 
 
 class StateManager:

@@ -20,7 +20,6 @@ Two acceptance rules:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax

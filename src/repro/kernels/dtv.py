@@ -13,7 +13,6 @@ v5e core, and the 2048 lane dim is 128-aligned for the VPU.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

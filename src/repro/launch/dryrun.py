@@ -253,7 +253,7 @@ def run_case(arch: str, shape_name: str, mesh_kind: str,
 
     multi = mesh_kind == "multi"
     mesh = make_production_mesh(multi_pod=multi)
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         fn, args, shards, cfg, meta = build_case(arch, shape_name, mesh,
                                                  multi, kv_quant=kv_quant)
@@ -261,9 +261,9 @@ def run_case(arch: str, shape_name: str, mesh_kind: str,
         with mesh:
             jitted = jax.jit(fn, in_shardings=shards)
             lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         if isinstance(cost, (list, tuple)):

@@ -43,7 +43,6 @@ pointer rewind.  Per-layer attention caches are pool-shaped
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -144,7 +144,7 @@ def init_slstm_block(key, cfg: ModelConfig):
     ks = jax.random.split(key, 4)
     s = 1.0 / math.sqrt(d)
     pf = cfg.ssm.slstm_proj_factor if cfg.ssm else 1.334
-    dff = int(d * pf)
+    dff = int(d * pf)  # speclint: disable=host-sync -- static config arithmetic, not a traced value
     p = {
         "ln": nn.init_rmsnorm(d, dt)[0],
         "w": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(jnp.float32),

@@ -10,7 +10,6 @@ everything else shards).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax

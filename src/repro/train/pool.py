@@ -5,18 +5,17 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .. import checkpoint as ckpt
 from ..configs.llama_pool import demo_pool
 from ..core import ModelPool
 from ..data import CorpusConfig, SyntheticCorpus
 from ..models.model import LanguageModel
-from .step import TrainState, init_train_state, make_train_step
+from .step import init_train_state, make_train_step
 
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__),
                            "../../../checkpoints/demo_pool")
@@ -31,7 +30,7 @@ def train_one(cfg, corpus: SyntheticCorpus, steps: int, batch: int = 16,
                                       total=steps, remat=False))
     it = corpus.batches(batch, seq, seed=seed + 1)
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for s in range(steps):
         tokens = jnp.asarray(next(it))
         ts, metrics = step_fn(ts, tokens)
@@ -40,7 +39,7 @@ def train_one(cfg, corpus: SyntheticCorpus, steps: int, batch: int = 16,
             losses.append(loss)
             if verbose:
                 print(f"  [{cfg.name}] step {s:4d} loss {loss:.4f} "
-                      f"({time.time()-t0:.0f}s)")
+                      f"({time.perf_counter()-t0:.0f}s)")
     return ts.params, losses
 
 

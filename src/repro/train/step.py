@@ -5,7 +5,6 @@ the multi-pod dry-run (train_4k lowering)."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax

@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core import ChainRouter, ModelPool
-from repro.data import CorpusConfig, SyntheticCorpus
 from repro.data.workload import Request
 from repro.models import ModelConfig
 from repro.models.model import LanguageModel

@@ -29,6 +29,18 @@ def test_dtv_matches_ref(B, V, dtype):
     assert np.all(got >= -1e-6) and np.all(got <= 1 + 1e-6)
 
 
+def test_softmax_stats_matches_ref():
+    """The standalone stats kernel (dtv's first pass) against its oracle:
+    padded tile boundaries and an uneven tail."""
+    from repro.kernels import dtv as _dtv
+    for R, V in [(_dtv.BLK_R, _dtv.BLK_V), (2 * _dtv.BLK_R, 2 * _dtv.BLK_V)]:
+        x = (jax.random.normal(KEY, (R, V)) * 3).astype(jnp.float32)
+        m, s = _dtv.softmax_stats(x)
+        m_ref, s_ref = ref.softmax_stats_ref(x)
+        np.testing.assert_allclose(m[:, 0], m_ref, rtol=1e-6)
+        np.testing.assert_allclose(s[:, 0], s_ref, rtol=2e-5)
+
+
 def test_dtv_identical_is_zero():
     a = jax.random.normal(KEY, (4, 1000))
     np.testing.assert_allclose(ops.dtv(a, a), 0.0, atol=1e-6)

@@ -3,7 +3,6 @@ forward/rollback/resolve parity with the contiguous layout, the paged
 flash-decode kernel vs its jnp oracle, and the headline churn regression —
 one long-lived slot plus admission churn must run with ZERO defragment /
 reprefill escapes while staying bit-identical to target-only decoding."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

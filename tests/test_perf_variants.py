@@ -8,9 +8,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.models import ModelConfig, MoEConfig, SSMConfig
+from repro.models import ModelConfig, SSMConfig
 from repro.models.model import LanguageModel
 
 

@@ -1,13 +1,9 @@
 """ModelChainScheduler (Alg. 1, Eq. 7) and similarity/EMA units."""
-import math
 
-import numpy as np
-import pytest
 
 from repro.core import (EMA, ModelChainScheduler, PerformanceProfiler,
                         SimilarityStore, acceptance_from_sim,
                         expected_accepted)
-from repro.core.scheduler import ChainChoice
 
 
 def test_ema_formula():

@@ -1,0 +1,492 @@
+"""speclint conformance tests.
+
+Positive/negative fixture pairs per AST rule (path-suffix scoping means a
+tmp tree like ``tmp/core/executor.py`` exercises the hot-path rules),
+suppression and baseline semantics, CLI exit codes, the kernel/oracle
+meta-rule against both fixtures and the real tree, and the Pallas bounds
+checker against an injected out-of-bounds index map and the real kernels.
+The jaxpr/HLO dynamic tiers (which jit a tiny pool) are marked slow.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import ast_rules, meta_rules, pallas_bounds
+from repro.analysis.findings import (
+    Baseline,
+    Finding,
+    apply_suppressions,
+    collect_suppressions,
+)
+from repro.analysis.speclint import main as speclint_main
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+def scan(path, source):
+    return ast_rules.run_file(path, source)
+
+
+# ---------------------------------------------------------------------------
+# AST tier: positive / negative pairs per rule
+# ---------------------------------------------------------------------------
+class TestHostSyncRule:
+    def test_device_get_in_hot_path_flagged(self):
+        src = "import jax\n\ndef f(x):\n    return jax.device_get(x)\n"
+        found = scan("src/repro/core/executor.py", src)
+        assert rules_of(found) == ["host-sync"]
+        assert found[0].line == 4
+
+    def test_device_get_outside_hot_path_ok(self):
+        src = "import jax\n\ndef f(x):\n    return jax.device_get(x)\n"
+        assert scan("benchmarks/report.py", src) == []
+
+    def test_item_in_models_flagged(self):
+        src = "def f(x):\n    return x.item()\n"
+        assert rules_of(scan("src/repro/models/ssm.py", src)) == ["host-sync"]
+
+    def test_np_asarray_in_traced_scope_flagged(self):
+        src = (
+            "import jax\nimport numpy as np\n\n"
+            "@jax.jit\ndef step(x):\n    return np.asarray(x)\n"
+        )
+        found = scan("src/repro/core/chain_router.py", src)
+        assert rules_of(found) == ["host-sync"]
+        assert "np.asarray" in found[0].message
+
+    def test_np_asarray_in_untraced_host_code_ok(self):
+        # the per-op processors sync on purpose (billed to the profiler)
+        src = "import numpy as np\n\ndef host_side(x):\n    return np.asarray(x)\n"
+        assert scan("src/repro/core/executor.py", src) == []
+
+    def test_scan_body_is_traced_scope(self):
+        src = (
+            "import jax\n\n"
+            "def cycle(xs):\n"
+            "    def body(carry, x):\n"
+            "        return carry, float(x)\n"
+            "    return jax.lax.scan(body, 0, xs)\n"
+        )
+        found = scan("src/repro/core/executor.py", src)
+        assert rules_of(found) == ["host-sync"]
+        assert "float()" in found[0].message
+
+    def test_tracer_bool_branch_flagged(self):
+        src = (
+            "import jax\nimport jax.numpy as jnp\n\n"
+            "@jax.jit\ndef f(x):\n"
+            "    if jnp.any(x > 0):\n"
+            "        return x\n"
+            "    return -x\n"
+        )
+        found = scan("src/repro/models/transformer.py", src)
+        assert rules_of(found) == ["host-sync"]
+        assert "lax.cond" in found[0].message
+
+    def test_jnp_in_traced_scope_ok(self):
+        src = (
+            "import jax\nimport jax.numpy as jnp\n\n"
+            "@jax.jit\ndef f(x):\n    return jnp.asarray(x) + 1\n"
+        )
+        assert scan("src/repro/core/executor.py", src) == []
+
+
+class TestRngRules:
+    def test_literal_key_in_library_flagged(self):
+        src = "import jax\n\ndef f():\n    return jax.random.PRNGKey(0)\n"
+        assert rules_of(scan("src/repro/core/executor.py", src)) == [
+            "rng-literal-key"]
+
+    def test_literal_key_in_tests_ok(self):
+        src = "import jax\n\ndef f():\n    return jax.random.PRNGKey(0)\n"
+        assert scan("tests/test_foo.py", src) == []
+
+    def test_key_from_caller_ok(self):
+        src = "import jax\n\ndef f(seed):\n    return jax.random.PRNGKey(seed)\n"
+        assert scan("src/repro/core/executor.py", src) == []
+
+    def test_key_reuse_flagged(self):
+        src = (
+            "import jax\n\n"
+            "def f(key, a, b):\n"
+            "    x = jax.random.normal(key, (3,))\n"
+            "    y = jax.random.uniform(key, (3,))\n"
+            "    return x + y\n"
+        )
+        found = scan("src/repro/train/pool.py", src)
+        assert rules_of(found) == ["rng-key-reuse"]
+        assert "'key'" in found[0].message
+
+    def test_key_split_ok(self):
+        src = (
+            "import jax\n\n"
+            "def f(key, a, b):\n"
+            "    k1, k2 = jax.random.split(key)\n"
+            "    x = jax.random.normal(k1, (3,))\n"
+            "    y = jax.random.uniform(k2, (3,))\n"
+            "    return x + y\n"
+        )
+        assert scan("src/repro/train/pool.py", src) == []
+
+    def test_nested_function_scopes_independent(self):
+        # one sampler per function: no reuse even though the names collide
+        src = (
+            "import jax\n\n"
+            "def outer(key):\n"
+            "    x = jax.random.normal(key, (3,))\n"
+            "    def inner(key):\n"
+            "        return jax.random.uniform(key, (3,))\n"
+            "    return x, inner\n"
+        )
+        assert scan("src/repro/train/pool.py", src) == []
+
+
+class TestBroadExceptRule:
+    def test_bare_except_in_core_flagged(self):
+        src = "def f():\n    try:\n        g()\n    except:\n        pass\n"
+        assert rules_of(scan("src/repro/core/scheduler.py", src)) == [
+            "broad-except"]
+
+    def test_except_exception_in_models_flagged(self):
+        src = (
+            "def f():\n    try:\n        g()\n"
+            "    except Exception:\n        pass\n"
+        )
+        assert rules_of(scan("src/repro/models/moe.py", src)) == [
+            "broad-except"]
+
+    def test_narrow_except_ok(self):
+        src = (
+            "def f():\n    try:\n        g()\n"
+            "    except (ValueError, KeyError):\n        pass\n"
+        )
+        assert scan("src/repro/core/scheduler.py", src) == []
+
+    def test_broad_except_outside_serving_ok(self):
+        src = "def f():\n    try:\n        g()\n    except Exception:\n        pass\n"
+        assert scan("src/repro/launch/dryrun.py", src) == []
+
+
+class TestDefaultsRules:
+    def test_mutable_default_flagged(self):
+        src = "def f(x, acc=[]):\n    acc.append(x)\n    return acc\n"
+        assert rules_of(scan("src/repro/core/util.py", src)) == [
+            "mutable-default"]
+
+    def test_none_default_ok(self):
+        src = "def f(x, acc=None):\n    return acc or [x]\n"
+        assert scan("src/repro/core/util.py", src) == []
+
+    def test_implicit_optional_dataclass_field_flagged(self):
+        src = (
+            "import dataclasses\nimport numpy as np\n\n"
+            "@dataclasses.dataclass\nclass Req:\n"
+            "    active: np.ndarray = None\n"
+        )
+        found = scan("src/repro/core/executor.py", src)
+        assert rules_of(found) == ["dataclass-pytree"]
+        assert "Optional" in found[0].message
+
+    def test_explicit_optional_dataclass_field_ok(self):
+        src = (
+            "import dataclasses\nfrom typing import Optional\n"
+            "import numpy as np\n\n"
+            "@dataclasses.dataclass\nclass Req:\n"
+            "    active: Optional[np.ndarray] = None\n"
+        )
+        assert scan("src/repro/core/executor.py", src) == []
+
+    def test_mutable_dataclass_field_flagged(self):
+        src = (
+            "import dataclasses\n\n"
+            "@dataclasses.dataclass\nclass Req:\n"
+            "    extras: dict = {}\n"
+        )
+        found = scan("src/repro/core/executor.py", src)
+        assert rules_of(found) == ["dataclass-pytree"]
+        assert "default_factory" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+class TestSuppressions:
+    SRC = (
+        "import jax\n\n"
+        "def f(x):\n"
+        "    return jax.device_get(x)"
+        "  # speclint: disable=host-sync -- sanctioned transfer\n"
+    )
+
+    def test_inline_suppression_with_reason(self):
+        path = "src/repro/core/executor.py"
+        found = scan(path, self.SRC)
+        sups, bad = collect_suppressions(self.SRC, path)
+        assert bad == []
+        assert apply_suppressions(found, {path: sups}) == []
+
+    def test_suppression_without_reason_is_finding(self):
+        src = self.SRC.replace(" -- sanctioned transfer", "")
+        path = "src/repro/core/executor.py"
+        sups, bad = collect_suppressions(src, path)
+        assert rules_of(bad) == ["bad-suppression"]
+        # and the original finding is NOT suppressed
+        assert rules_of(apply_suppressions(scan(path, src), {path: sups})) \
+            == ["host-sync"]
+
+    def test_standalone_comment_covers_next_line(self):
+        src = (
+            "import jax\n\n"
+            "def f(x):\n"
+            "    # speclint: disable=host-sync -- the one transfer\n"
+            "    return jax.device_get(x)\n"
+        )
+        path = "src/repro/core/executor.py"
+        sups, bad = collect_suppressions(src, path)
+        assert bad == []
+        assert apply_suppressions(scan(path, src), {path: sups}) == []
+
+    def test_wrong_rule_does_not_suppress(self):
+        src = self.SRC.replace("disable=host-sync", "disable=rng-literal-key")
+        path = "src/repro/core/executor.py"
+        sups, _ = collect_suppressions(src, path)
+        assert rules_of(apply_suppressions(scan(path, src), {path: sups})) \
+            == ["host-sync"]
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+class TestBaseline:
+    def _finding(self):
+        return Finding(rule="host-sync", path="src/repro/core/executor.py",
+                       line=10, message="m", snippet="x = jax.device_get(y)")
+
+    def test_fingerprint_survives_line_drift(self):
+        a = self._finding()
+        b = Finding(rule=a.rule, path=a.path, line=99, message=a.message,
+                    snippet="  x =   jax.device_get(y)")
+        assert a.fingerprint() == b.fingerprint()
+
+    def test_roundtrip_and_filter(self, tmp_path):
+        f = self._finding()
+        p = tmp_path / "bl.json"
+        Baseline.write(p, [f])
+        data = json.loads(p.read_text())
+        data["findings"][0]["reason"] = "grandfathered in PR 8"
+        p.write_text(json.dumps(data))
+        bl = Baseline.load(p)
+        assert bl.validate() == []
+        new, matched = bl.filter([f])
+        assert new == [] and matched == [f.fingerprint()]
+        assert bl.stale(matched) == []
+
+    def test_entry_without_reason_is_finding(self, tmp_path):
+        p = tmp_path / "bl.json"
+        Baseline.write(p, [self._finding()])  # reasons left empty
+        assert rules_of(Baseline.load(p).validate()) == ["bad-baseline"]
+
+    def test_stale_entries_reported(self, tmp_path):
+        p = tmp_path / "bl.json"
+        Baseline.write(p, [self._finding()])
+        bl = Baseline.load(p)
+        new, matched = bl.filter([])  # finding fixed meanwhile
+        assert bl.stale(matched) == [self._finding().fingerprint()]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def _write_tree(root, files):
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+
+
+class TestCli:
+    CLEAN = {"core/executor.py": "import jax.numpy as jnp\n\n"
+                                 "def f(x):\n    return jnp.sum(x)\n"}
+    DIRTY = {"core/executor.py": "import jax\n\n"
+                                 "def f(x):\n    return jax.device_get(x)\n"}
+
+    def test_exit_zero_on_clean_tree(self, tmp_path, capsys):
+        _write_tree(tmp_path, self.CLEAN)
+        rc = speclint_main([str(tmp_path), "--tiers", "ast",
+                            "--baseline", str(tmp_path / "bl.json")])
+        assert rc == 0
+        assert "speclint: clean" in capsys.readouterr().out
+
+    def test_exit_one_on_findings(self, tmp_path, capsys):
+        _write_tree(tmp_path, self.DIRTY)
+        rc = speclint_main([str(tmp_path), "--tiers", "ast",
+                            "--baseline", str(tmp_path / "bl.json")])
+        assert rc == 1
+        assert "[host-sync]" in capsys.readouterr().out
+
+    def test_exit_two_on_unknown_tier(self, tmp_path):
+        assert speclint_main([str(tmp_path), "--tiers", "nope"]) == 2
+
+    def test_exit_two_on_missing_paths(self):
+        assert speclint_main(["--tiers", "ast"]) == 2
+
+    def test_list_rules(self, capsys):
+        assert speclint_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rule in ("host-sync", "pallas-oob", "runtime-transfer-per-cycle"):
+            assert rule in out
+
+    def test_write_baseline_then_justify_then_clean(self, tmp_path, capsys):
+        _write_tree(tmp_path, self.DIRTY)
+        bl = tmp_path / "bl.json"
+        assert speclint_main([str(tmp_path), "--tiers", "ast",
+                              "--baseline", str(bl),
+                              "--write-baseline"]) == 0
+        # unjustified baseline entries are themselves findings
+        assert speclint_main([str(tmp_path), "--tiers", "ast",
+                              "--baseline", str(bl)]) == 1
+        assert "[bad-baseline]" in capsys.readouterr().out
+        data = json.loads(bl.read_text())
+        for e in data["findings"]:
+            e["reason"] = "pre-existing; tracked for PR 9"
+        bl.write_text(json.dumps(data))
+        assert speclint_main([str(tmp_path), "--tiers", "ast",
+                              "--baseline", str(bl)]) == 0
+        assert "(1 baselined)" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Meta rule: kernel / oracle / parity-test coverage
+# ---------------------------------------------------------------------------
+class TestMetaRule:
+    KERNEL = (
+        "from jax.experimental import pallas as pl\n\n"
+        "def fancy_pallas(x):\n"
+        "    return pl.pallas_call(_k, out_shape=x)(x)\n"
+    )
+
+    def test_missing_oracle_flagged(self):
+        found = meta_rules.run([("src/repro/kernels/fancy.py", self.KERNEL)],
+                               "def other_ref(x):\n    return x\n", [])
+        assert rules_of(found) == ["kernel-no-oracle"]
+        assert "fancy_ref" in found[0].message
+
+    def test_missing_parity_test_flagged(self):
+        found = meta_rules.run([("src/repro/kernels/fancy.py", self.KERNEL)],
+                               "def fancy_ref(x):\n    return x\n", [])
+        assert rules_of(found) == ["kernel-no-parity-test"]
+
+    def test_oracle_plus_test_ok(self):
+        found = meta_rules.run(
+            [("src/repro/kernels/fancy.py", self.KERNEL)],
+            "def fancy_ref(x):\n    return x\n",
+            [("tests/test_k.py", "from repro.kernels.ref import fancy_ref\n")])
+        assert found == []
+
+    def test_real_tree_is_green(self):
+        from pathlib import Path
+        found = meta_rules.load_and_run(
+            [Path("src")], [Path("tests")])
+        assert found == [], [f.format() for f in found]
+
+
+# ---------------------------------------------------------------------------
+# Pallas bounds tier
+# ---------------------------------------------------------------------------
+class TestPallasBounds:
+    def test_real_kernels_in_bounds(self):
+        found = pallas_bounds.run()
+        assert found == [], [f.format() for f in found]
+
+    def test_injected_oob_index_map_flagged(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def bad_launcher(x):
+            blk = 4
+            n = x.shape[0] // blk
+            return pl.pallas_call(
+                lambda x_ref, o_ref: None,
+                grid=(n,),
+                in_specs=[pl.BlockSpec((blk,), lambda i: (i + 1,))],  # off by one
+                out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(x)
+
+        found = pallas_bounds.check_launch(
+            bad_launcher, jnp.zeros((16,), jnp.float32))
+        assert "pallas-oob" in rules_of(found)
+        assert "outside extent 16" in found[0].message
+
+    def test_rank_mismatch_flagged(self):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def bad_rank(x):
+            return pl.pallas_call(
+                lambda x_ref, o_ref: None,
+                grid=(2,),
+                in_specs=[pl.BlockSpec((4, 4), lambda i: (i, 0))],  # x is 1-D
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(x)
+
+        found = pallas_bounds.check_launch(
+            bad_rank, jnp.zeros((16,), jnp.float32))
+        assert "pallas-spec-arity" in rules_of(found)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr tier primitives (fast: no pool, traces toy programs)
+# ---------------------------------------------------------------------------
+class TestJaxprPrimitives:
+    def test_callback_primitive_detected(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.analysis import jaxpr_rules
+
+        def leaky(x):
+            jax.debug.print("x={}", x)  # lowers to a callback primitive
+            return jnp.sum(x)
+
+        found = jaxpr_rules.check_entry_point(
+            "leaky", leaky, (jax.ShapeDtypeStruct((4,), jnp.float32),),
+            "src/repro/core/executor.py")
+        assert rules_of(found) == ["jaxpr-callback"]
+
+    def test_clean_program_passes(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.analysis import jaxpr_rules
+
+        found = jaxpr_rules.check_entry_point(
+            "clean", lambda x: jnp.sum(x) * 2,
+            (jax.ShapeDtypeStruct((4,), jnp.float32),),
+            "src/repro/core/executor.py")
+        assert found == []
+
+
+# ---------------------------------------------------------------------------
+# Dynamic tiers against the real fused cycle (jits a tiny pool)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestDynamicTiers:
+    @pytest.fixture(scope="class")
+    def cap(self):
+        from repro.analysis import harness
+        return harness.capture_fused_linear()
+
+    def test_fused_cycle_jaxpr_clean(self, cap):
+        from repro.analysis import jaxpr_rules
+        found = jaxpr_rules.run(cap)
+        assert found == [], [f.format() for f in found]
+
+    def test_fused_cycle_hlo_and_runtime_clean(self, cap):
+        from repro.analysis import hlo_rules
+        found = hlo_rules.run(cap)
+        assert found == [], [f.format() for f in found]

@@ -1,11 +1,9 @@
 """Substrate units: optimizer, checkpoint store, data pipeline, sharding
 rules, profiler."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import exists, load, save
