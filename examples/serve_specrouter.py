@@ -21,9 +21,29 @@ baselines for the EAF speedup.
                             # workload's with_slo are in data/workload.py)
         [--shed]            # drop queued requests whose TTFT deadline is
                             # already unmeetable (goodput over latency)
+        [--mesh dxm]        # mesh-sharded serving: place the pool on a
+                            # ("data","model") device mesh (target
+                            # tensor-parallel, drafts replicated); on a
+                            # CPU host virtual devices are spawned
+                            # automatically to fill the mesh
 """
 import argparse
 import math
+import os
+import sys
+
+# --mesh needs the devices to EXIST before jax initializes its backend:
+# spawn virtual CPU devices (the launch/dryrun.py recipe) before any
+# jax-importing import below runs.  Respect a user-provided XLA_FLAGS.
+if "--mesh" in sys.argv and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    _spec = sys.argv[sys.argv.index("--mesh") + 1]
+    _n = 1
+    for _p in _spec.split("x"):
+        _n *= int(_p)
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               f" --xla_force_host_platform_device_count={_n}"
+                               ).strip()
 
 import numpy as np
 
@@ -57,7 +77,8 @@ def run(pool, corpus, args, label, router_kwargs):
                         slo_latency_s=args.slo,
                         shed_policy="ttft" if args.shed else "none",
                         router_kwargs=router_kwargs,
-                        continuous=not args.no_continuous)
+                        continuous=not args.no_continuous,
+                        mesh=args.mesh)
     m = eng.run(reqs)
     line = (f"[{label:<22}] goodput {m.goodput_tps:7.1f} tok/s | "
             f"TTFT {m.avg_ttft_s:6.2f}s (p95 {m.p95_ttft_s:5.2f}s, "
@@ -119,6 +140,12 @@ def main():
     ap.add_argument("--shed", action="store_true",
                     help="shed queued requests whose TTFT deadline "
                          "cannot be met anymore (needs --ttft-slo)")
+    ap.add_argument("--mesh", default=None, metavar="DXM",
+                    help="place the pool on a ('data','model') device "
+                         "mesh, e.g. 2x4: the target is tensor-parallel "
+                         "over the model axis, drafts are replicated; "
+                         "virtual CPU devices are spawned to fill the "
+                         "mesh when needed")
     args = ap.parse_args()
     if args.workload == "trace" and not args.trace_file:
         ap.error("--workload trace requires --trace-file")

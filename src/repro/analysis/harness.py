@@ -21,16 +21,20 @@ DEFAULT_WINDOW = 3
 DONATE_ARGNUMS = (1, 2, 3, 6)  # states, seq, seq_len, active — executor contract
 
 
-def tiny_pool():
+def tiny_pool(mesh=None):
     """Two dense models small enough that jit + a few cycles stay in
-    seconds on CPU."""
+    seconds on CPU.  ``mesh`` ("dxm" spec / Mesh / Placement) places the
+    pool: target tensor-parallel, draft replicated — the same
+    ``auto_assign`` shape the serving engine's ``--mesh`` knob uses."""
     import jax.numpy as jnp
 
-    from repro.core import ModelPool
+    from repro.core import ModelPool, Placement
     from repro.models import ModelConfig
     from repro.models.model import LanguageModel
 
-    p = ModelPool()
+    placement = (Placement.from_spec(mesh) if mesh is not None
+                 else Placement.single())
+    p = ModelPool(placement=placement)
     for (n, L, d, s) in [("lintd", 2, 32, 1), ("lintt", 2, 48, 2)]:
         cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
                           d_model=d, num_heads=4, num_kv_heads=2,
@@ -38,6 +42,8 @@ def tiny_pool():
         lm = LanguageModel(cfg)
         params, axes = lm.init(jax.random.PRNGKey(s))
         p.register(cfg, params=params, param_axes=axes)
+    if not placement.is_trivial and not placement.kinds:
+        placement.auto_assign(p.capability(), "lintt")
     return p
 
 
@@ -49,10 +55,15 @@ class FusedCapture:
     chain: Tuple[str, ...]
     router: Any               # the ChainRouter that drove the capture
     pool: Any
+    placement: Any = None     # the pool's Placement (None == trivial)
 
 
-def _to_sds(x: Any) -> Any:
+def _to_sds(x: Any, keep_sharding: bool = False) -> Any:
     if hasattr(x, "shape") and hasattr(x, "dtype"):
+        sh = getattr(x, "sharding", None) if keep_sharding else None
+        from jax.sharding import NamedSharding
+        if isinstance(sh, NamedSharding):
+            return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype, sharding=sh)
         return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype)
     return jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype)
 
@@ -61,13 +72,18 @@ def capture_fused_linear(
     chain: Tuple[str, ...] = DEFAULT_CHAIN,
     window: int = DEFAULT_WINDOW,
     budget: int = 10,
+    mesh=None,
 ) -> FusedCapture:
     """Drive a fused linear generate on the tiny pool, capturing the fused
-    body + concrete arg shapes on the first fused cycle."""
+    body + concrete arg shapes on the first fused cycle.  With ``mesh``
+    the pool is PLACED and the captured arg shapes carry the real
+    NamedShardings, so downstream lowering reproduces the sharded
+    program (collectives and all)."""
     from repro.core import ChainRouter
     from repro.core.executor import Executor
 
-    pool = tiny_pool()
+    pool = tiny_pool(mesh)
+    meshed = not pool.placement.is_trivial
     captured: Dict[str, Any] = {}
     orig = Executor._fused_program
 
@@ -78,12 +94,14 @@ def capture_fused_linear(
         if tree is not None or "body" in captured:
             return prog
         lms = [self.pool.model(m) for m in chain_]
-        body = self._build_fused_linear(lms, window_, greedy, temperature,
-                                        prefix_width, eos)
+        body = self._build_fused_linear(
+            lms, window_, greedy, temperature, prefix_width, eos,
+            reshard=self.placement.reshard_between_levels())
 
         def wrapper(*args):
             if "arg_sds" not in captured:
-                captured["arg_sds"] = jax.tree.map(_to_sds, args)
+                captured["arg_sds"] = jax.tree.map(
+                    lambda x: _to_sds(x, keep_sharding=meshed), args)
                 captured["body"] = body
                 captured["prog"] = prog
                 captured["chain"] = tuple(chain_)
@@ -109,7 +127,8 @@ def capture_fused_linear(
             f"for chain {chain} (window {window})")
     return FusedCapture(body=captured["body"], prog=captured["prog"],
                         arg_sds=captured["arg_sds"],
-                        chain=captured["chain"], router=router, pool=pool)
+                        chain=captured["chain"], router=router, pool=pool,
+                        placement=pool.placement)
 
 
 def kernel_op_entry_points() -> List[Tuple[str, Callable, Tuple[Any, ...]]]:

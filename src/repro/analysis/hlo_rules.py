@@ -43,9 +43,14 @@ def check_compiled_program(cap: harness.FusedCapture) -> List[Finding]:
     from repro.launch import hlo_analysis
 
     findings: List[Finding] = []
+    placement = getattr(cap, "placement", None)
+    meshed = placement is not None and placement.size > 1
+    mctx = (placement.mesh_context() if placement is not None
+            else contextlib.nullcontext())
     jitted = jax.jit(cap.body, donate_argnums=harness.DONATE_ARGNUMS)
     try:
-        text = jitted.lower(*cap.arg_sds).compile().as_text()
+        with mctx:
+            text = jitted.lower(*cap.arg_sds).compile().as_text()
     except Exception as e:
         return [Finding(
             rule="hlo-compile-error", path=_EXECUTOR_PATH, line=0,
@@ -55,7 +60,11 @@ def check_compiled_program(cap: harness.FusedCapture) -> List[Finding]:
         )]
 
     stats = hlo_analysis.analyze(text)
-    if stats["collective_bytes"] > 0:
+    if stats["collective_bytes"] > 0 and not meshed:
+        # On a multi-device placement collectives are EXPECTED — the
+        # tensor-parallel verify and the level-boundary reshard lower to
+        # them by design.  Only an UNEXPLAINED collective (one appearing
+        # on a trivial/1x1 placement) is a finding.
         bad = {k: v for k, v in stats["collectives"].items() if v > 0}
         findings.append(Finding(
             rule="hlo-collectives", path=_EXECUTOR_PATH, line=0,

@@ -101,10 +101,16 @@ def _leaf_avals(tree: Any) -> List[Tuple[Tuple[int, ...], Any]]:
 
 
 def check_fused_donation(cap: harness.FusedCapture) -> List[Finding]:
+    import contextlib
+
     findings: List[Finding] = []
+    placement = getattr(cap, "placement", None)
+    mctx = (placement.mesh_context() if placement is not None
+            else contextlib.nullcontext())
     jitted = jax.jit(cap.body, donate_argnums=harness.DONATE_ARGNUMS)
     try:
-        text = jitted.lower(*cap.arg_sds).as_text()
+        with mctx:
+            text = jitted.lower(*cap.arg_sds).as_text()
     except Exception as e:
         return [Finding(
             rule="jaxpr-trace-error", path=_EXECUTOR_PATH, line=0,
@@ -150,8 +156,13 @@ def run(cap: Optional[harness.FusedCapture] = None) -> List[Finding]:
                          f"{type(e).__name__}: {e}"),
                 snippet="fused_linear:capture",
             )]
-    findings.extend(check_entry_point(
-        "fused_linear_cycle", cap.body, cap.arg_sds, _EXECUTOR_PATH))
+    import contextlib
+    placement = getattr(cap, "placement", None)
+    mctx = (placement.mesh_context() if placement is not None
+            else contextlib.nullcontext())
+    with mctx:
+        findings.extend(check_entry_point(
+            "fused_linear_cycle", cap.body, cap.arg_sds, _EXECUTOR_PATH))
     findings.extend(check_fused_donation(cap))
     for name, fn, args in harness.kernel_op_entry_points():
         findings.extend(check_entry_point(name, fn, args, _OPS_PATH))

@@ -49,7 +49,9 @@ RULE_DOCS = {
                       "device program",
     "jaxpr-donation": "donated buffer cannot alias an output",
     "jaxpr-trace-error": "entry point failed to trace/lower",
-    "hlo-collectives": "collectives in the compiled single-device fused cycle",
+    "hlo-collectives": "UNEXPLAINED collectives in the compiled fused cycle "
+                       "(single-device/1x1 placement only; a sharded "
+                       "placement expects them)",
     "hlo-host-transfer": "host transfer ops inside the compiled fused cycle",
     "hlo-compile-error": "fused cycle failed to compile",
     "runtime-transfer-per-cycle": "a fused cycle made != 1 host transfer "
@@ -117,7 +119,8 @@ def run_static_tiers(
     return apply_suppressions(findings, suppressions), suppressions
 
 
-def run_dynamic_tiers(tiers: Tuple[str, ...], out=sys.stderr) -> List[Finding]:
+def run_dynamic_tiers(tiers: Tuple[str, ...], out=sys.stderr,
+                      mesh: Optional[str] = None) -> List[Finding]:
     findings: List[Finding] = []
     if "pallas" in tiers:
         from . import pallas_bounds
@@ -125,9 +128,10 @@ def run_dynamic_tiers(tiers: Tuple[str, ...], out=sys.stderr) -> List[Finding]:
     cap = None
     if "jaxpr" in tiers or "hlo" in tiers:
         from . import harness
-        print("speclint: capturing fused cycle (jits a tiny pool)...",
-              file=out)
-        cap = harness.capture_fused_linear()
+        where = f" on mesh {mesh}" if mesh else ""
+        print(f"speclint: capturing fused cycle (jits a tiny pool{where})"
+              "...", file=out)
+        cap = harness.capture_fused_linear(mesh=mesh)
     if "jaxpr" in tiers:
         from . import jaxpr_rules
         findings.extend(jaxpr_rules.run(cap))
@@ -152,6 +156,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="write current findings to the baseline and exit "
                          "(justifications must then be filled in by hand)")
+    ap.add_argument("--mesh", default=None, metavar="DXM",
+                    help="run the dynamic tiers on a PLACED pool (e.g. "
+                         "2x4).  Collectives in the compiled fused cycle "
+                         "are then expected, not findings; the one-host-"
+                         "transfer-per-cycle contract is still enforced.  "
+                         "Needs the devices to exist (export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N before "
+                         "running).")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
@@ -177,7 +189,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     try:
         files = _gather_files(args.paths)
         findings, _ = run_static_tiers(files, tiers)
-        findings.extend(run_dynamic_tiers(tiers))
+        findings.extend(run_dynamic_tiers(tiers, mesh=args.mesh))
     except KeyboardInterrupt:
         raise
     except Exception:

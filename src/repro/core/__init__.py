@@ -2,7 +2,8 @@ from .chain_router import ChainRouter, GenerationResult
 from .executor import (DraftRequest, DraftTreeRequest, Executor,
                        PrefillRequest, ResolveTreeRequest, RollbackRequest,
                        VerifyRequest, VerifyTreeRequest)
-from .model_pool import DeviceManager, ModelPool
+from .model_pool import ModelPool, PoolEntry
+from .placement import Placement, parse_mesh
 from .profiler import EMA, PerformanceProfiler
 from .scheduler import (ChainChoice, LoadSignal, ModelChainScheduler,
                         expected_accepted, expected_tree_accepted)

@@ -178,6 +178,11 @@ class ChainRouter:
                 "tree speculation needs a draft model in the chain"
         self.reschedule_every = reschedule_every
         self.profiler = profiler or PerformanceProfiler()
+        # the pool's placement (Placement.single() unless the pool was
+        # built with a mesh): threads the per-member NamedSharding trees
+        # through the executor and makes every profiling/scheduler key
+        # placement-qualified.  Trivial placement = identity everywhere.
+        self.placement = pool.placement
         self.states = StateManager()
         self.executor = Executor(pool, self.states, self.profiler)
         self.sims = SimilarityStore()
@@ -185,6 +190,7 @@ class ChainRouter:
             pool.names(), target, self.profiler, self.sims,
             pool.capability(), max_chain_len=max_chain_len, windows=windows,
             tree_shapes=self.tree_shapes, tree_capable=tree_ok,
+            qualify=self.placement.qualify,
             **(scheduler_kwargs or {}))
         self.rng = jax.random.PRNGKey(seed)
         # static gap-prefix width: one jit shape per (model, Tc).  Tree
@@ -1059,12 +1065,21 @@ class RouterSession:
         host path mutated it since the last fused cycle."""
         if self._dev is not None and not self._dev_stale:
             return
+        # under a real mesh the session buffers are explicitly replicated
+        # (every member's slice reads them); trivial placement keeps the
+        # plain single-device upload
+        rep = self.router.placement.replicated_sharding()
+
+        def up(x):
+            a = jnp.asarray(x)
+            return a if rep is None else jax.device_put(a, rep)
+
         self._dev = {
-            "seq": jnp.asarray(self.seq),
-            "seq_len": jnp.asarray(self.seq_len.astype(np.int32)),
-            "prompt_len": jnp.asarray(self.prompt_len.astype(np.int32)),
-            "budget": jnp.asarray(self.budget.astype(np.int32)),
-            "active": jnp.asarray(self.active),
+            "seq": up(self.seq),
+            "seq_len": up(self.seq_len.astype(np.int32)),
+            "prompt_len": up(self.prompt_len.astype(np.int32)),
+            "budget": up(self.budget.astype(np.int32)),
+            "active": up(self.active),
         }
         self._dev_stale = False
 
@@ -1083,13 +1098,15 @@ class RouterSession:
         scheduler's Eq. 7 inputs): draft decode (decode_level for the
         tree's shape) and a verify EMA per verifier level."""
         emas = self.router.profiler.emas
-        draft_key = (("decode_level", chain[0], tree.branching)
-                     if tree is not None else ("decode1", chain[0]))
+        pq = self.router.placement.qualify
+        draft_key = (("decode_level", pq(chain[0]), tree.branching)
+                     if tree is not None else ("decode1", pq(chain[0])))
         e = emas.get(draft_key)
         if e is None or e.count == 0:
             return False
         for m in chain[1:]:
-            if not any(k[0] == "verify" and k[1] == m and e.count
+            qm = pq(m)
+            if not any(k[0] == "verify" and k[1] == qm and e.count
                        for k, e in emas.items() if len(k) == 3):
                 return False
         return True

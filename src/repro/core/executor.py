@@ -387,6 +387,17 @@ class Executor:
         self.pool = pool
         self.states = states
         self.profiler = profiler
+        self.placement = pool.placement
+        # placement-qualified profiling keys: the scheduler's T_i model is
+        # keyed by (model, slice) — the same model on a different slice is
+        # a different cost.  Identity on the trivial placement, so every
+        # pre-placement EMA key is unchanged.
+        self._pq = self.placement.qualify
+        # trace-time mesh scope: every jitted program is CALLED (and so
+        # first traced) inside this context — the Pallas wrappers in
+        # kernels/ops.py replicate their operands only when a mesh is
+        # active.  nullcontext on the trivial placement and 1x1 meshes.
+        self._mctx = self.placement.mesh_context
         self._jit_cache: Dict[tuple, Any] = {}
 
     # ---- jitted primitive builders ------------------------------------
@@ -436,20 +447,29 @@ class Executor:
         state, state_axes = lm.make_state(B, req.max_len,
                                           with_snaps=req.with_snaps,
                                           paged=req.paged)
+        # allocate the fresh KV state under the member's placement (the
+        # same sharding.py rules that placed the params shard the KV block
+        # pools); None on the trivial placement — no movement, the legacy
+        # single-device path
+        sharding = self.placement.state_sharding(req.model, state_axes,
+                                                 state)
+        if sharding is not None:
+            state = jax.device_put(state, sharding)
         key = ("prefillop", req.model, req.tokens.shape, req.paged)
         if key not in self._jit_cache:
             def f(params, state, tokens, valid, extras):
                 return lm.prefill(params, state, tokens, valid=valid,
                                   logits_mode="last", **extras)
             self._jit_cache[key] = jax.jit(f)
-        with self.profiler.timed("prefill", req.model,
-                                 tokens=int(req.valid.sum())):
+        with self.profiler.timed("prefill", self._pq(req.model),
+                                 tokens=int(req.valid.sum())), self._mctx():
             logits, state = self._jit_cache[key](
                 params, state, jnp.asarray(req.tokens),
                 jnp.asarray(req.valid), req.extras)
             logits = jax.block_until_ready(logits)
         self.profiler.count("host_sync")
-        self.states.create(sid, state, layer_axes=state_axes.layers)
+        self.states.create(sid, state, layer_axes=state_axes.layers,
+                           sharding=sharding)
         probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
         return np.asarray(probs), sid
 
@@ -463,8 +483,8 @@ class Executor:
         sid = StateManager.key(req.model, req.request_id)
         state = self.states.get(sid)
         fwd_last = self._fwd(req.model, "last")
-        with self.profiler.timed("insert", req.model,
-                                 tokens=int(req.valid.sum())):
+        with self.profiler.timed("insert", self._pq(req.model),
+                                 tokens=int(req.valid.sum())), self._mctx():
             logits, state = fwd_last(params, state,
                                      jnp.asarray(req.tokens),
                                      jnp.asarray(req.valid), {})
@@ -519,15 +539,16 @@ class Executor:
         f = self._draft_scan(req.model, req.window, req.greedy,
                              req.temperature)
         t0 = time.perf_counter()
-        toks, probs, state = f(params, state,
-                               jnp.asarray(req.prefix_tokens),
-                               jnp.asarray(req.prefix_valid),
-                               jnp.asarray(req.active), rng)
+        with self._mctx():
+            toks, probs, state = f(params, state,
+                                   jnp.asarray(req.prefix_tokens),
+                                   jnp.asarray(req.prefix_valid),
+                                   jnp.asarray(req.active), rng)
         toks = jax.block_until_ready(toks)
         dt = time.perf_counter() - t0
         # amortized per-token draft time feeds the scheduler's T_i
-        self.profiler.record("decode1", req.model, dt / req.window,
-                             tokens=req.window)
+        self.profiler.record("decode1", self._pq(req.model),
+                             dt / req.window, tokens=req.window)
         self.profiler.count("host_sync")
         self.states.update(sid, state)
         return np.asarray(toks), np.asarray(probs)
@@ -549,14 +570,15 @@ class Executor:
         bvalid = jnp.asarray(bvalid) & active[:, None]
 
         t0 = time.perf_counter()
-        logits, state = fwd_all(params, state, jnp.asarray(block),
-                                bvalid, {})
+        with self._mctx():
+            logits, state = fwd_all(params, state, jnp.asarray(block),
+                                    bvalid, {})
         logits = jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
-        self.profiler.record("verify", req.model, dt, tokens=Tc,
+        self.profiler.record("verify", self._pq(req.model), dt, tokens=Tc,
                              block=Tc + 1)
         # amortized per-token verify time (the decode1 analogue)
-        self.profiler.record("verify1", req.model, dt / (Tc + 1))
+        self.profiler.record("verify1", self._pq(req.model), dt / (Tc + 1))
         self.profiler.count("host_sync")
         self.states.update(sid, state)
 
@@ -572,14 +594,16 @@ class Executor:
             else:
                 self._jit_cache[key] = jax.jit(partial(
                     ver.verify_sampling, temperature=req.temperature))
-        if req.greedy:
-            res = self._jit_cache[key](cands, vlogits, cprobs, active)
-        else:
-            res = self._jit_cache[key](
-                cands, vlogits, cprobs,
-                self._req_rng(req.rng, req.greedy, "verify"), active=active,
-                valid_len=(jnp.asarray(req.valid_len)
-                           if req.valid_len is not None else None))
+        with self._mctx():
+            if req.greedy:
+                res = self._jit_cache[key](cands, vlogits, cprobs, active)
+            else:
+                res = self._jit_cache[key](
+                    cands, vlogits, cprobs,
+                    self._req_rng(req.rng, req.greedy, "verify"),
+                    active=active,
+                    valid_len=(jnp.asarray(req.valid_len)
+                               if req.valid_len is not None else None))
         return jax.tree.map(np.asarray, res)
 
     def rollback(self, req: RollbackRequest):
@@ -587,8 +611,8 @@ class Executor:
         SSM archs restore snapshots first — model.rollback handles both)."""
         sid = StateManager.key(req.model, req.request_id)
         state = self.states.get(sid)
-        with self.profiler.timed("rollback", req.model,
-                                 tokens=int(req.r.sum())):
+        with self.profiler.timed("rollback", self._pq(req.model),
+                                 tokens=int(req.r.sum())), self._mctx():
             state = self._rollback(req.model)(state, jnp.asarray(req.r))
             jax.block_until_ready(state.write_ptr)
         self.profiler.count("host_sync")
@@ -625,10 +649,11 @@ class Executor:
         f = self._draft_tree(req.model, req.tree, req.greedy,
                              req.temperature)
         t0 = time.perf_counter()
-        toks, probs, state = f(params, state,
-                               jnp.asarray(req.prefix_tokens),
-                               jnp.asarray(req.prefix_valid),
-                               jnp.asarray(req.active), rng)
+        with self._mctx():
+            toks, probs, state = f(params, state,
+                                   jnp.asarray(req.prefix_tokens),
+                                   jnp.asarray(req.prefix_valid),
+                                   jnp.asarray(req.active), rng)
         toks = jax.block_until_ready(toks)
         dt = time.perf_counter() - t0
         # per-LEVEL wall time keyed by the full branching profile (meta
@@ -636,12 +661,12 @@ class Executor:
         # nodes, so feeding it into the per-token decode1 EMA would
         # contaminate the linear cost model, and distinct shapes (even
         # with equal node counts) must not share an EMA
-        self.profiler.record("decode_level", req.model,
+        self.profiler.record("decode_level", self._pq(req.model),
                              dt / req.tree.depth_levels,
                              tokens=req.tree.num_nodes,
                              block=req.tree.branching)
         # amortized per-node draft time (the decode1 analogue for trees)
-        self.profiler.record("decode1_tree", req.model,
+        self.profiler.record("decode1_tree", self._pq(req.model),
                              dt / req.tree.num_nodes)
         self.profiler.count("host_sync")
         self.states.update(sid, state)
@@ -697,13 +722,14 @@ class Executor:
         bvalid = jnp.asarray(bvalid) & active[:, None]
         fwd = self._fwd_tree(req.model, req.tree, G1)
         t0 = time.perf_counter()
-        logits, state = fwd(params, state, jnp.asarray(block), bvalid)
+        with self._mctx():
+            logits, state = fwd(params, state, jnp.asarray(block), bvalid)
         logits = jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
-        self.profiler.record("verify", req.model, dt, tokens=N,
+        self.profiler.record("verify", self._pq(req.model), dt, tokens=N,
                              block=N + 1)
         # amortized per-node verify time (the decode1 analogue)
-        self.profiler.record("verify1", req.model, dt / (N + 1))
+        self.profiler.record("verify1", self._pq(req.model), dt / (N + 1))
         self.profiler.count("host_sync")
         self.states.update(sid, state)
 
@@ -711,9 +737,10 @@ class Executor:
         rng = self._req_rng(req.rng, req.greedy, "verify_tree")
         fmath = self._verify_tree_math(req.tree, req.greedy,
                                        req.temperature, req.final)
-        res = fmath(jnp.asarray(req.candidates), vlogits,
-                    jnp.asarray(req.node_valid),
-                    jnp.asarray(req.candidate_probs), rng, active)
+        with self._mctx():
+            res = fmath(jnp.asarray(req.candidates), vlogits,
+                        jnp.asarray(req.node_valid),
+                        jnp.asarray(req.candidate_probs), rng, active)
         return jax.tree.map(np.asarray, res)
 
     def _resolve_tree(self, model: str, tree: TokenTree):
@@ -734,18 +761,29 @@ class Executor:
     # Fused cycle executor (device-resident speculative cycles)
     # ------------------------------------------------------------------
     def _build_fused_linear(self, lms, window: int, greedy: bool,
-                            temperature: float, P: int, eos: int):
+                            temperature: float, P: int, eos: int,
+                            reshard=None):
         """One program = one whole LINEAR cycle: gap prefixes for every
         chain member, the draft scan, each level's verify (+ splice), the
         consensus rollback, the commit into the device seq buffer, and
         budget/EOS termination.  Mirrors ``ChainRouter._one_cycle`` op for
         op (the math is the same shared functions), so greedy output is
-        bit-exact across paths."""
+        bit-exact across paths.
+
+        ``reshard`` (Placement.reshard_between_levels) constrains the
+        candidate slab back to replicated at every level boundary, so a
+        slab produced on the draft's slice reaches a tensor-parallel
+        verifier via XLA collectives INSIDE this one program — never a
+        host hop.  None on the trivial placement (identical lowering to
+        the unmeshed program); a sharding constraint never changes
+        values, so meshed output stays bit-exact where the arithmetic
+        itself is unchanged (any mesh, 1x1 guaranteed)."""
         N = len(lms)
         W = window
         C = (W + N - 1) if N >= 2 else 1        # commit slab width
         draft_body = _draft_scan_body(lms[0], W if N >= 2 else 1,
                                       greedy, temperature)
+        rs = reshard if reshard is not None else (lambda x: x)
 
         def f(params, states, seq, seq_len, prompt_len, budget, active,
               gmask, rngs):
@@ -770,6 +808,7 @@ class Executor:
                 cand, cprobs, st = draft_body(params[0], states[0], pfx,
                                               pval, run, rngs[0])
                 states[0] = st
+                cand, cprobs = rs(cand), rs(cprobs)
                 valid_len = jnp.full((B,), W, jnp.int32)
                 ks, dts = [], []
                 res = None
@@ -796,6 +835,7 @@ class Executor:
                     if j < N - 1:
                         cand, cprobs, valid_len = ver.splice_candidates(
                             cand, cprobs, res)
+                        cand, cprobs = rs(cand), rs(cprobs)
                 k_n = ks[-1]
                 ks_arr = jnp.stack(ks)                   # (N-1, B)
                 rbs = ver.consensus_rollbacks(ks_arr, W, run)
@@ -819,14 +859,18 @@ class Executor:
         return f
 
     def _build_fused_tree(self, lms, tree: TokenTree, greedy: bool,
-                          temperature: float, P: int, eos: int):
+                          temperature: float, P: int, eos: int,
+                          reshard=None):
         """One program = one whole TREE cycle (draft tree, per-level prune,
         merged target verify, consensus resolve, commit, termination) —
-        mirrors ``ChainRouter._one_tree_cycle``."""
+        mirrors ``ChainRouter._one_tree_cycle``.  ``reshard`` as in
+        ``_build_fused_linear``: the node slab is constrained back to
+        replicated at level boundaries under a real mesh."""
         N = len(lms)
         NT, D = tree.num_nodes, tree.depth_levels
         C = D + 1
         draft_body = _draft_tree_body(lms[0], tree, greedy, temperature)
+        rs = reshard if reshard is not None else (lambda x: x)
         spec_depth = jnp.asarray(np.concatenate(
             [np.full(P, -1, np.int32), tree.depth]))
         spec_attend = jnp.asarray(np.concatenate(
@@ -844,6 +888,7 @@ class Executor:
             cand, cprobs, st = draft_body(params[0], states[0], pfx, pval,
                                           run, rngs[0])
             states[0] = st
+            cand, cprobs = rs(cand), rs(cprobs)
             node_valid = jnp.broadcast_to(run[:, None], (B, NT))
             acc_mats, ks, dts = [], [], []
             res = None
@@ -902,12 +947,19 @@ class Executor:
         if key in self._jit_cache:
             return self._jit_cache[key]
         lms = [self.pool.model(m) for m in chain]
+        # level-boundary reshard (None on the trivial placement): the
+        # candidate slab crosses between member slices on DEVICE, inside
+        # this one program — the one-transfer-per-cycle contract holds
+        # under meshes
+        reshard = self.placement.reshard_between_levels()
         if tree is not None:
             body = self._build_fused_tree(lms, tree, greedy, temperature,
-                                          prefix_width, eos)
+                                          prefix_width, eos,
+                                          reshard=reshard)
         else:
             body = self._build_fused_linear(lms, window, greedy,
-                                            temperature, prefix_width, eos)
+                                            temperature, prefix_width, eos,
+                                            reshard=reshard)
         # donate the model states + the seq/seq_len/active session buffers:
         # the cycle replaces them wholesale, so XLA can update in place
         prog = jax.jit(body, donate_argnums=(1, 2, 3, 6))
@@ -929,9 +981,10 @@ class Executor:
         t0 = time.perf_counter()
         ok = False
         try:
-            out = prog(params, tuple(states), req.seq, req.seq_len,
-                       req.prompt_len, req.budget, req.active, req.gmask,
-                       tuple(req.rngs))
+            with self._mctx():
+                out = prog(params, tuple(states), req.seq, req.seq_len,
+                           req.prompt_len, req.budget, req.active,
+                           req.gmask, tuple(req.rngs))
             ok = True
         finally:
             # try/finally, not a broad except: nothing is swallowed and
@@ -958,7 +1011,8 @@ class Executor:
         summary = jax.device_get(summary)
         dt = time.perf_counter() - t0
         self.profiler.count("host_sync")
-        self.profiler.record("fused_cycle", "+".join(req.chain), dt,
+        self.profiler.record("fused_cycle",
+                             "+".join(self._pq(m) for m in req.chain), dt,
                              tokens=int(summary.n_committed.sum()))
         return {"seq": seq, "seq_len": seq_len, "active": active}, summary
 
@@ -973,8 +1027,9 @@ class Executor:
         # so kvc.resolve_tree asserts instead (contiguous states ignore it)
         active = (jnp.asarray(req.active, bool)
                   if req.active is not None else None)
-        with self.profiler.timed("rollback", req.model,
-                                 tokens=int(req.keep_len.sum())):
+        with self.profiler.timed("rollback", self._pq(req.model),
+                                 tokens=int(req.keep_len.sum())), \
+                self._mctx():
             state = self._resolve_tree(req.model, req.tree)(
                 state, jnp.asarray(req.path_nodes, jnp.int32),
                 jnp.asarray(req.keep_len, jnp.int32), active)

@@ -1,11 +1,15 @@
-"""ModelPool + DeviceManager (paper §4.5): heterogeneous model lifecycle
-(registration, lazy init/loading, caching, GC) and device placement.
+"""ModelPool (paper §4.5): heterogeneous model lifecycle (registration,
+lazy init/loading, caching, GC) and mesh placement.
 
 TPU adaptation (DESIGN §3): instead of the paper's whole-model-per-GPU
-placement, each model carries a *sharding tree* for a common mesh; on this
-CPU host placement degrades to the single device, while the dry-run path
-uses the same axes metadata to build NamedShardings over the 16x16 / 2x16x16
-production meshes.
+placement, the pool carries ONE ``Placement`` (core/placement.py) for a
+shared mesh; ``ensure_loaded`` materializes a member's params under its
+placement kind's NamedSharding tree (draft replicated, target
+tensor-parallel by default) and takes an exact per-device memory charge
+that ``unload`` reverses precisely.  The default trivial placement
+degrades to the single local device — byte-identical to the
+pre-placement pool — while the dry-run path and the ``--mesh`` serving
+knob use the same axes metadata over real meshes.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import jax
 
 from ..models.config import ModelConfig
 from ..models.model import LanguageModel
+from .placement import Placement
 
 
 @dataclasses.dataclass
@@ -25,8 +30,9 @@ class PoolEntry:
     params: Any = None
     param_axes: Any = None
     init_fn: Optional[Callable[[], Any]] = None  # lazy loader
-    device: Any = None
     loaded: bool = False
+    placed: bool = False          # device_put under the placement + charged
+    sharding: Any = None          # NamedSharding tree (None when trivial)
 
     def param_bytes(self) -> int:
         if not self.loaded:
@@ -35,29 +41,20 @@ class PoolEntry:
                    for x in jax.tree.leaves(self.params))
 
 
-class DeviceManager:
-    """Tracks devices and per-device memory estimates; offers CPU fallback
-    (paper §4.7).  On this host there is one CPU device; the API mirrors the
-    paper's multi-GPU placement so serving code is placement-agnostic."""
-
-    def __init__(self):
-        self.devices = list(jax.devices())
-        self.usage = {d: 0 for d in self.devices}
-
-    def place(self, nbytes: int):
-        dev = min(self.devices, key=lambda d: self.usage[d])
-        self.usage[dev] += nbytes
-        return dev
-
-    def free(self, device, nbytes: int):
-        if device in self.usage:
-            self.usage[device] = max(0, self.usage[device] - nbytes)
-
-
 class ModelPool:
-    def __init__(self):
+    def __init__(self, placement: Optional[Placement] = None):
         self._entries: Dict[str, PoolEntry] = {}
-        self.device_manager = DeviceManager()
+        self.placement = placement or Placement.single()
+
+    def set_placement(self, placement: Placement) -> None:
+        """Swap the pool's placement BEFORE anything is placed (the
+        serving engine's ``mesh=`` knob calls this between pool
+        construction and router construction)."""
+        if any(e.placed for e in self._entries.values()):
+            raise RuntimeError(
+                "set_placement after members were placed — construct the "
+                "pool with the placement (or set it before first use)")
+        self.placement = placement
 
     def register(self, cfg: ModelConfig,
                  params: Any = None, param_axes: Any = None,
@@ -80,21 +77,37 @@ class ModelPool:
     def cfg(self, name: str) -> ModelConfig:
         return self._entries[name].cfg
 
-    def params(self, name: str):
+    def ensure_loaded(self, name: str) -> PoolEntry:
+        """Materialize a member: lazy-init its params if needed, then
+        place them under the pool placement (device_put with the member's
+        NamedSharding tree on a real mesh; no-op movement on the trivial
+        placement) and take the exact memory charge.  Idempotent."""
         e = self._entries[name]
         if not e.loaded:
             assert e.init_fn is not None, f"{name}: no params and no init_fn"
             e.params, e.param_axes = e.init_fn()
             e.loaded = True
-            e.device = self.device_manager.place(e.param_bytes())
-        return e.params
+        if not e.placed:
+            e.sharding = self.placement.param_sharding(
+                name, e.param_axes, e.params, cfg=e.cfg)
+            if e.sharding is not None:
+                e.params = jax.device_put(e.params, e.sharding)
+            self.placement.charge(name, e.params, e.sharding)
+            e.placed = True
+        return e
+
+    def params(self, name: str):
+        return self.ensure_loaded(name).params
 
     def unload(self, name: str):
-        """GC a model's weights (keeps registration for lazy re-load)."""
+        """GC a model's weights (keeps registration for lazy re-load) and
+        discharge exactly the memory charge ``ensure_loaded`` took."""
         e = self._entries[name]
         if e.loaded and e.init_fn is not None:
-            self.device_manager.free(e.device, e.param_bytes())
-            e.params, e.loaded, e.device = None, False, None
+            if e.placed:
+                self.placement.discharge(name)
+            e.params, e.loaded = None, False
+            e.placed, e.sharding = False, None
 
     def capability(self) -> Dict[str, float]:
         """Capability ordering for Alg. 1 — analytic parameter count."""

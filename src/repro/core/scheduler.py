@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .profiler import PerformanceProfiler
 from .similarity import (SimilarityStore, SlotSimilarity,
@@ -107,11 +107,17 @@ class ModelChainScheduler:
                  capability_exponent: float = 0.5,
                  slo_aware: bool = False,
                  load_beta: float = 8.0,
-                 slo_miss_penalty: float = 4.0):
+                 slo_miss_penalty: float = 4.0,
+                 qualify: Optional[Callable[[str], str]] = None):
         assert target in model_names
         self.models = list(model_names)
         self.target = target
         self.profiler = profiler
+        # placement-qualified profiling keys (Placement.qualify): the T_i
+        # model is keyed by (model, mesh slice) — the same model placed on
+        # a different slice reads a different EMA.  Identity by default
+        # (trivial placement), so unplaced pools see unchanged keys.
+        self.qualify = qualify if qualify is not None else (lambda m: m)
         self.sims = sims
         self.capability = capability  # e.g. param count — sorts the pool
         self.max_chain_len = max_chain_len
@@ -233,7 +239,7 @@ class ModelChainScheduler:
         reads the raw cycle cost (queued requests wait on cycle
         boundaries, so cycle wall time IS their TTFT currency)."""
         prof = self.profiler
-        T = {m: prof.decode_time(m, self._default_time(m))
+        T = {m: prof.decode_time(self.qualify(m), self._default_time(m))
              for m in chain}
         if len(chain) == 1:
             return T[chain[0]], 1.0
@@ -251,11 +257,12 @@ class ModelChainScheduler:
             a_bar = 1.0
             for a in alphas:
                 a_bar *= a
-            cost = D * prof.level_time(chain[0], tree.branching,
-                                       T[chain[0]])
+            cost = D * prof.level_time(self.qualify(chain[0]),
+                                       tree.branching, T[chain[0]])
             for j in range(1, len(chain)):
                 verify_default = T[chain[j]] * (1.0 + self.nu * N)
-                cost += prof.verify_time(chain[j], N + 1, verify_default)
+                cost += prof.verify_time(self.qualify(chain[j]), N + 1,
+                                         verify_default)
             committed = expected_tree_accepted(a_bar, tree.branching) + 1.0
             return cost, committed
 
@@ -265,7 +272,8 @@ class ModelChainScheduler:
         for j in range(1, len(chain)):
             block = lam
             verify_default = T[chain[j]] * (1.0 + self.nu * block)
-            cost += prof.verify_time(chain[j], int(round(block)) + 1,
+            cost += prof.verify_time(self.qualify(chain[j]),
+                                     int(round(block)) + 1,
                                      verify_default)
             acc = expected_accepted(alphas[j - 1], lam)
             if j < len(chain) - 1:
@@ -375,7 +383,9 @@ class ModelChainScheduler:
                 if prev is not None and chain != prev:
                     # amortized catch-up prefill for newly joining models
                     joiners = set(chain) - set(prev)
-                    pen = sum(self.profiler.prefill_time(m, 10 * self._default_time(m))
+                    pen = sum(self.profiler.prefill_time(
+                                  self.qualify(m),
+                                  10 * self._default_time(m))
                               for m in joiners)
                     t = t + pen / self.switch_penalty_steps
                 s = self.score_choice(t, cost, slot=slot)

@@ -26,6 +26,7 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict
 
+import jax
 import numpy as np
 
 from ..models.kv_cache import (PagedModelState, blocks_in_use, fragmentation, defragment, free_rows as _free_rows)
@@ -35,17 +36,36 @@ class StateManager:
     def __init__(self, defrag_threshold: float = 0.5):
         self._states: Dict[str, Any] = {}
         self._axes: Dict[str, Any] = {}
+        self._shardings: Dict[str, Any] = {}
         self._lock = threading.Lock()
         self.defrag_threshold = defrag_threshold
         self.defrag_count = 0
 
-    def create(self, state_id: str, state, layer_axes: Any = None):
+    def create(self, state_id: str, state, layer_axes: Any = None,
+               sharding: Any = None):
+        """``sharding`` (a NamedSharding pytree from Placement) places the
+        KV block pools / session buffers explicitly on creation; it is
+        remembered so mesh-aware callers can re-place a rebuilt state.
+        None (the trivial placement) leaves the state exactly where the
+        allocating op produced it — the legacy single-device path."""
+        if sharding is not None:
+            state = jax.device_put(state, sharding)
         with self._lock:
             self._states[state_id] = state
             if layer_axes is not None:
                 self._axes[state_id] = layer_axes
             else:
                 self._axes.pop(state_id, None)
+            if sharding is not None:
+                self._shardings[state_id] = sharding
+            else:
+                self._shardings.pop(state_id, None)
+
+    def sharding(self, state_id: str):
+        """The NamedSharding tree a state was created with (None on the
+        trivial placement)."""
+        with self._lock:
+            return self._shardings.get(state_id)
 
     def get(self, state_id: str):
         with self._lock:
@@ -82,6 +102,7 @@ class StateManager:
         with self._lock:
             self._states.pop(state_id, None)
             self._axes.pop(state_id, None)
+            self._shardings.pop(state_id, None)
 
     def release_request(self, request_id: str):
         """GC every model's state for a finished request/session."""
@@ -89,6 +110,7 @@ class StateManager:
             for k in [k for k in self._states if k.endswith("/" + request_id)]:
                 self._states.pop(k)
                 self._axes.pop(k, None)
+                self._shardings.pop(k, None)
 
     def free_rows(self, state_id: str, rows: np.ndarray):
         """Retire slot rows of a session state atomically: the read, the

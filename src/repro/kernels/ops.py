@@ -11,6 +11,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.interpreters import pxla
+from jax.sharding import NamedSharding, PartitionSpec
 
 from . import attention as _attn
 from . import dtv as _dtv
@@ -18,6 +20,24 @@ from . import verify as _verify
 from . import ref
 
 _INTERPRET = jax.default_backend() != "tpu"
+
+
+def _force_replicated(*arrays):
+    """Pallas kernels are OPAQUE to the GSPMD partitioner: given sharded
+    operands it can run the kernel per-shard (partial softmax over a split
+    head/seq dim — numerically wrong), not insert collectives.  Under an
+    active multi-device mesh (the mesh-sharded serving path traces every
+    program inside ``with placement.mesh:`` — see Executor), constrain all
+    operands to replicated so the kernel always sees full arrays; XLA then
+    places the gather collectives OUTSIDE the kernel.  With no mesh
+    context (the trivial placement) this is a no-op and the lowering is
+    byte-identical to the unmeshed path."""
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or mesh.size == 1:
+        return arrays if len(arrays) > 1 else arrays[0]
+    rep = NamedSharding(mesh, PartitionSpec())
+    out = tuple(jax.lax.with_sharding_constraint(a, rep) for a in arrays)
+    return out if len(out) > 1 else out[0]
 
 
 def _pad_to(x, mult, axis, value):
@@ -41,6 +61,7 @@ def dtv(a_logits: jnp.ndarray, b_logits: jnp.ndarray,
                 _dtv.BLK_R, 0, _dtv.NEG)
     b = _pad_to(_pad_to(b_logits, _dtv.BLK_V, 1, _dtv.NEG),
                 _dtv.BLK_R, 0, _dtv.NEG)
+    a, b = _force_replicated(a, b)
     return _dtv.dtv_pallas(a, b, interpret=_INTERPRET)[:B]
 
 
@@ -55,6 +76,7 @@ def verify_row_stats(logits: jnp.ndarray, cand: jnp.ndarray,
     x = _pad_to(_pad_to(logits, _verify.BLK_V, 1, _verify.NEG),
                 _verify.BLK_R, 0, _verify.NEG)
     c = _pad_to(cand.astype(jnp.int32), _verify.BLK_R, 0, 0)
+    x, c = _force_replicated(x, c)
     am, m, s, cl = _verify.verify_stats_pallas(x, c, interpret=_INTERPRET)
     return am[:R], m[:R], s[:R], cl[:R]
 
@@ -72,6 +94,7 @@ def draft_topk(logits: jnp.ndarray, k: int, use_kernel: bool = True):
     R, V = logits.shape
     x = _pad_to(_pad_to(logits, _verify.BLK_V, 1, _verify.NEG),
                 _verify.BLK_R, 0, _verify.NEG)
+    x = _force_replicated(x)
     vals, idx = _verify.topk_pallas(x, k, interpret=_INTERPRET)
     return vals[:R], idx[:R]
 
@@ -100,6 +123,7 @@ def masked_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     kp = _pad_to(kp, _attn.BLK_S, 1, 0.0)
     vp = _pad_to(vp, _attn.BLK_S, 1, 0.0)
     mp = _pad_to(mask, _attn.BLK_S, 1, False)
+    qp, kp, vp, mp = _force_replicated(qp, kp, vp, mp)
     out = _attn.masked_decode_attention_pallas(
         qp, kp, vp, mp, scale=scale, interpret=_INTERPRET)
     return out[:, :, :D]
@@ -125,6 +149,7 @@ def masked_tree_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     kp = _pad_to(kp, _attn.BLK_S, 1, 0.0)
     vp = _pad_to(vp, _attn.BLK_S, 1, 0.0)
     mp = _pad_to(mask, _attn.BLK_S, 2, False)
+    qp, kp, vp, mp = _force_replicated(qp, kp, vp, mp)
     out = _attn.masked_tree_attention_pallas(
         qp, kp, vp, mp, scale=scale, interpret=_INTERPRET)
     return out[:, :, :, :D]
@@ -160,6 +185,7 @@ def paged_decode_attention(q: jnp.ndarray, k_flat: jnp.ndarray,
     kp = kf.reshape(P, block_size, *kf.shape[1:])
     vp = vf.reshape(P, block_size, *vf.shape[1:])
     tbl = jnp.clip(block_table, 0, P - 1)
+    qp, kp, vp, tbl, mask = _force_replicated(qp, kp, vp, tbl, mask)
     out = _attn.paged_flash_decode_pallas(
         qp, kp, vp, tbl, mask, scale=scale, interpret=_INTERPRET)
     return out[:, :, :, :D]

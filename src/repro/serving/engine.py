@@ -62,7 +62,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core import ChainRouter, LoadSignal, ModelPool, PerformanceProfiler
+from ..core import (ChainRouter, LoadSignal, ModelPool, PerformanceProfiler,
+                    Placement)
 from ..data.workload import Request
 
 # serving keeps a bounded op trace: the profiler's EMAs/counters (what the
@@ -109,9 +110,31 @@ class ServingEngine:
                  ttft_slo_s: Optional[float] = None,
                  tpot_slo_s: Optional[float] = None,
                  slo_aware: Optional[bool] = None,
-                 shed_policy: str = "none"):
+                 shed_policy: str = "none",
+                 mesh: Optional[object] = None):
         self.pool = pool
         self.target = target
+        # --- mesh placement (``--mesh dxm``) ----------------------------
+        # ``mesh`` is a "dxm" spec string ("2x4"), a jax Mesh, or a
+        # prebuilt Placement.  The pool's members are placed BEFORE the
+        # router exists (params/KV device_put under NamedSharding trees):
+        # target tensor-parallel over the "model" axis, drafts replicated
+        # (Placement.auto_assign) — pass a Placement with explicit
+        # ``assign`` calls to override kinds.  None = trivial placement,
+        # byte-identical to the unmeshed engine.
+        if mesh is not None:
+            placement = Placement.from_spec(mesh)
+            if not placement.kinds:
+                placement.auto_assign(pool.capability(), target)
+            if pool.placement.is_trivial:
+                pool.set_placement(placement)
+            elif pool.placement.describe() != placement.describe():
+                # a pool already serving on one mesh cannot be re-placed
+                # under another (members hold device-put params); same
+                # spec = reuse (several engines over one placed pool)
+                raise ValueError(
+                    f"pool is already placed on {pool.placement.describe()}"
+                    f", cannot re-place on {placement.describe()}")
         self.batch_size = batch_size       # slot count in continuous mode
         self.batch_wait_s = batch_wait_s   # legacy batch-formation window
         self.slo = slo_latency_s

@@ -6,16 +6,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ChainRouter, ModelPool
+from repro.core import ChainRouter, ModelPool, Placement
 from repro.models import ModelConfig
 from repro.models.model import LanguageModel
 
 pytestmark = pytest.mark.slow   # full bit-equality sweep, ~2 min on CPU
 
 
-@pytest.fixture(scope="module")
-def pool():
-    p = ModelPool()
+def build_pool(mesh=None):
+    """The standard 3-model test pool; ``mesh`` places it (target
+    tensor-parallel, drafts replicated — the serving default)."""
+    p = ModelPool(placement=Placement.from_spec(mesh)
+                  if mesh is not None else None)
     for (n, L, d, s) in [("m68", 2, 32, 1), ("m1b", 3, 48, 2),
                          ("m7b", 4, 64, 3)]:
         cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
@@ -24,7 +26,14 @@ def pool():
         lm = LanguageModel(cfg)
         params, axes = lm.init(jax.random.PRNGKey(s))
         p.register(cfg, params=params, param_axes=axes)
+    if not p.placement.is_trivial:
+        p.placement.auto_assign(p.capability(), "m7b")
     return p
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return build_pool()
 
 
 @pytest.fixture(scope="module")
@@ -97,6 +106,57 @@ def test_fused_equivalence(pool, reference, mode):
     for b in range(3):
         np.testing.assert_array_equal(fus.generated[b], unf.generated[b])
         np.testing.assert_array_equal(fus.generated[b], ref.generated[b])
+
+
+@pytest.mark.parametrize("mode", ["linear", "tree"])
+@pytest.mark.parametrize("greedy", [True, False])
+def test_mesh_1x1_bit_identical(pool, reference, mode, greedy):
+    """The placement refactor's correctness anchor: a pool placed on a
+    DEGENERATE 1x1 mesh (device_put with NamedShardings, placement-
+    qualified profiling keys, the whole placement path active) produces
+    BIT-identical output to the unmeshed pool — greedy and sampling,
+    linear and tree, fused and per-op."""
+    prompt, plens, _ = reference
+    meshed = build_pool("1x1")
+    assert not meshed.placement.is_trivial
+    kw = dict(adaptive=False, fixed_chain=("m68", "m7b"))
+    if mode == "tree":
+        kw["fixed_tree"] = "2x1x1"
+    else:
+        kw["fixed_window"] = 4
+    if greedy:
+        kw["greedy"] = True
+    else:
+        kw.update(greedy=False, temperature=1.0, seed=11)
+    for fused in (False, True):
+        fkw = dict(kw, fused=fused)
+        if fused:
+            fkw["profile_every"] = 5
+        ref = ChainRouter(pool, "m7b", **fkw).generate(
+            prompt, plens, 14, request_id="um")
+        out = ChainRouter(meshed, "m7b", **fkw).generate(
+            prompt, plens, 14, request_id="mm")
+        for b in range(3):
+            np.testing.assert_array_equal(out.generated[b],
+                                          ref.generated[b])
+
+
+@pytest.mark.mesh
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 spawned devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_mesh_2x4_greedy_equivalence(pool, reference):
+    """On a REAL 2x4 mesh (tensor-parallel target, replicated draft) the
+    greedy committed stream still equals target-only — collectives change
+    the lowering, not the tokens."""
+    prompt, plens, ref = reference
+    meshed = build_pool("2x4")
+    out = ChainRouter(meshed, "m7b", greedy=True, adaptive=False,
+                      fixed_chain=("m68", "m7b"), fixed_window=4,
+                      fused=True, profile_every=5).generate(
+                          prompt, plens, 14, request_id="m24")
+    for b in range(3):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
 
 
 def test_speculation_actually_accepts():

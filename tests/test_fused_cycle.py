@@ -18,15 +18,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ChainRouter, ModelPool
+from repro.core import ChainRouter, ModelPool, Placement
 from repro.core.executor import DraftRequest
 from repro.models import ModelConfig
 from repro.models.model import LanguageModel
 
 
-@pytest.fixture(scope="module")
-def pool():
-    p = ModelPool()
+def build_pool(mesh=None):
+    p = ModelPool(placement=Placement.from_spec(mesh)
+                  if mesh is not None else None)
     for (n, L, d, s) in [("m68", 2, 32, 1), ("m1b", 3, 48, 2),
                          ("m7b", 4, 64, 3)]:
         cfg = ModelConfig(name=n, arch_type="dense", num_layers=L,
@@ -35,7 +35,14 @@ def pool():
         lm = LanguageModel(cfg)
         params, axes = lm.init(jax.random.PRNGKey(s))
         p.register(cfg, params=params, param_axes=axes)
+    if not p.placement.is_trivial:
+        p.placement.auto_assign(p.capability(), "m7b")
     return p
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return build_pool()
 
 
 @pytest.fixture(scope="module")
@@ -160,6 +167,61 @@ def test_profiling_cycle_interleave_updates_t_i(pool, reference):
     assert r.profiler.decode_time("m68", default=-1.0) > 0.0
     # fused cycles ran between the profiling cycles (not all per-op)
     assert r.profiler.emas[("fused_cycle", "m68+m7b")].count > 0
+
+
+@pytest.mark.slow   # extra compile pair on the placed pool
+@pytest.mark.parametrize("mesh", ["1x1"])
+def test_fused_mesh_bit_exact(pool, reference, mesh):
+    """The fused cycle built over a 1x1-PLACED pool (NamedSharding state
+    buffers, level-boundary reshard closures compiled in) commits the
+    exact same tokens as the unmeshed fused path, in the same number of
+    cycles, with the same single host transfer per cycle."""
+    prompt, plens, _ = reference
+    meshed = build_pool(mesh)
+    kw = dict(greedy=True, adaptive=False, fixed_chain=("m68", "m7b"),
+              fixed_window=4, fused=True, profile_every=1000)
+    ref = ChainRouter(pool, "m7b", **kw).generate(
+        prompt, plens, 14, request_id="u")
+    r = ChainRouter(meshed, "m7b", **kw)
+    out = r.generate(prompt, plens, 14, request_id="m")
+    assert out.steps == ref.steps
+    for b in range(3):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
+
+
+@pytest.mark.mesh
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 spawned devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_fused_mesh_2x4_one_transfer_per_cycle(pool, reference):
+    """On the 2x4 mesh the fused cycle still makes exactly ONE host
+    transfer per cycle — the commit slab moves between chain levels via
+    device-side collectives, never through the host — and commits the
+    same greedy tokens as the unmeshed fused path."""
+    prompt, plens, _ = reference
+    meshed = build_pool("2x4")
+    kw = dict(greedy=True, adaptive=False, fixed_chain=("m68", "m7b"),
+              fixed_window=4, fused=True, profile_every=1000)
+    ref = ChainRouter(pool, "m7b", **kw).generate(
+        prompt, plens, 14, request_id="u")
+    r = ChainRouter(meshed, "m7b", **kw)
+    out = r.generate(prompt, plens, 14, request_id="m")
+    for b in range(3):
+        np.testing.assert_array_equal(out.generated[b], ref.generated[b])
+    # steady-state transfer count: cycle 0 of a session is the per-op
+    # profiling cycle (intentional syncs); every fused cycle after it
+    # must make exactly one host transfer
+    sess = r.start_session(2, 96, session_id="m24")
+    sess.admit(0, prompt[0, :plens[0]], 10)
+    sess.admit(1, prompt[1, :plens[1]], 10)
+    sess.run_cycle()
+    steps, s0 = 0, r.profiler.counters["host_sync"]
+    while sess.active.any() and steps < 6:
+        sess.run_cycle()
+        steps += 1
+    assert steps > 0
+    assert r.profiler.counters["host_sync"] - s0 == steps
+    sess.close()
 
 
 def test_sampling_without_rng_raises(pool):

@@ -1,0 +1,359 @@
+"""Mesh-sharded serving: the Placement abstraction (per-pool-member mesh
+slices + NamedSharding trees) threaded through ModelPool, StateManager,
+Executor, scheduler, and engine.
+
+Pinned here:
+  * Placement unit semantics — spec parsing, kinds, qualified profiling
+    keys, trivial degeneration;
+  * EXACT memory accounting — repeated ModelPool load/unload cycles
+    return per-device usage to zero (the old DeviceManager recomputed and
+    clamped; the Placement reverses the precise charge it took);
+  * placement-keyed scheduler T_i — the same model on a different slice
+    reads a different EMA;
+  * the serving engine's ``mesh=`` knob;
+  * the 1x1-mesh bit-exactness anchor (full placement path active,
+    byte-identical lowering);
+  * the 8-virtual-device suite (gated on spawned device count): sharded
+    prefill/insert/retire, paged rollback, tree resolve, one host
+    transfer per fused cycle, and speclint conformance on placed pools.
+
+Run the 8-device half with:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        pytest -m mesh tests/
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChainRouter, ModelPool, Placement, parse_mesh
+from repro.core.placement import KINDS
+from repro.core.profiler import PerformanceProfiler
+from repro.core.scheduler import ModelChainScheduler
+from repro.core.similarity import SimilarityStore
+from repro.models import ModelConfig
+from repro.models.model import LanguageModel
+
+mesh8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 spawned devices (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8)")
+
+
+def tiny_cfg(name, L=2, d=32, heads=4, kv=2, vocab=61):
+    return ModelConfig(name=name, arch_type="dense", num_layers=L,
+                       d_model=d, num_heads=heads, num_kv_heads=kv,
+                       d_ff=2 * d, vocab_size=vocab, dtype=jnp.float32)
+
+
+def build_pool(mesh=None, lazy=False):
+    p = ModelPool(placement=Placement.from_spec(mesh)
+                  if mesh is not None else None)
+    for (n, L, d, s) in [("m68", 2, 32, 1), ("m7b", 4, 64, 3)]:
+        cfg = tiny_cfg(n, L=L, d=d)
+        lm = LanguageModel(cfg)
+        if lazy:
+            def init_fn(lm=lm, s=s):
+                return lm.init(jax.random.PRNGKey(s))
+            p.register(cfg, init_fn=init_fn)
+        else:
+            params, axes = lm.init(jax.random.PRNGKey(s))
+            p.register(cfg, params=params, param_axes=axes)
+    if not p.placement.is_trivial:
+        p.placement.auto_assign(p.capability(), "m7b")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Placement unit semantics (fast, no jit)
+# ---------------------------------------------------------------------------
+def test_parse_mesh_specs():
+    m = parse_mesh("1x1")
+    assert m.axis_names == ("data", "model") and m.size == 1
+    assert parse_mesh("1").size == 1          # "m" means "1xm"
+    with pytest.raises(ValueError, match="bad mesh spec"):
+        parse_mesh("2x")
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        parse_mesh("64x64")                   # more devices than exist
+
+
+def test_trivial_placement_degenerates():
+    p = Placement.single()
+    assert p.is_trivial and p.size == 1 and p.describe() == "single"
+    assert p.qualify("m7b") == "m7b"          # identity -> unchanged keys
+    assert p.param_sharding("m7b", None, None) is None
+    assert p.replicated_sharding() is None
+    assert p.reshard_between_levels() is None
+    import contextlib
+    assert isinstance(p.mesh_context(), contextlib.nullcontext().__class__)
+
+
+def test_placement_kinds_and_qualify():
+    p = Placement.from_spec("1x1")
+    p.auto_assign({"m68": 1.0, "m7b": 100.0}, "m7b")
+    assert p.kind("m7b") == "tensor" and p.kind("m68") == "replicated"
+    assert p.qualify("m7b") == "m7b@tensor:1x1"
+    assert p.qualify("m68") == "m68@replicated:1x1"
+    with pytest.raises(ValueError, match="unknown placement kind"):
+        p.assign("m68", "diagonal")
+    assert set(p.kinds.values()) <= set(KINDS)
+
+
+def test_from_spec_passthrough():
+    p = Placement.from_spec("1x1")
+    assert Placement.from_spec(p) is p
+    assert Placement.from_spec(p.mesh).describe() == "1x1"
+
+
+def test_set_placement_after_placed_raises():
+    pool = build_pool()
+    pool.ensure_loaded("m68")
+    with pytest.raises(RuntimeError, match="set_placement"):
+        pool.set_placement(Placement.from_spec("1x1"))
+
+
+# ---------------------------------------------------------------------------
+# Exact memory accounting (the unload satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mesh", [None, "1x1"])
+def test_load_unload_returns_usage_to_zero(mesh):
+    """Repeated load/unload cycles must return per-device usage EXACTLY
+    to zero: discharge reverses the precise charge taken at placement,
+    never a recomputed (and clampable) estimate."""
+    pool = build_pool(mesh, lazy=True)
+    pl = pool.placement
+    assert pl.total_usage() == 0
+    for _ in range(3):
+        pool.ensure_loaded("m68")
+        pool.ensure_loaded("m7b")
+        assert pl.total_usage() > 0
+        assert all(v >= 0 for v in pl.usage.values())
+        pool.unload("m68")
+        pool.unload("m7b")
+        assert pl.total_usage() == 0
+        assert all(v == 0 for v in pl.usage.values())
+
+
+def test_charge_matches_param_bytes_when_replicated():
+    """On a 1x1 mesh every member is whole on the single device, so the
+    placement's charge equals the analytic parameter byte count."""
+    pool = build_pool("1x1", lazy=True)
+    e = pool.ensure_loaded("m68")
+    assert pool.placement.total_usage() == e.param_bytes()
+    pool.unload("m68")
+    assert pool.placement.total_usage() == 0
+
+
+def test_recharge_is_idempotent():
+    pool = build_pool("1x1", lazy=True)
+    e = pool.ensure_loaded("m68")
+    pool.placement.charge("m68", e.params, e.sharding)   # re-charge
+    assert pool.placement.total_usage() == e.param_bytes()
+
+
+# ---------------------------------------------------------------------------
+# Placement-keyed scheduler T_i
+# ---------------------------------------------------------------------------
+def test_scheduler_t_i_is_placement_keyed():
+    """The scheduler must read decode/verify EMAs under the placement-
+    qualified key: the same model name on a different slice is a
+    different cost."""
+    placement = Placement.from_spec("1x1")
+    placement.auto_assign({"m68": 1.0, "m7b": 100.0}, "m7b")
+    prof = PerformanceProfiler()
+    # evidence recorded the way the Executor records it on a placed pool
+    prof.record("decode1", placement.qualify("m68"), 0.002)
+    prof.record("decode1", placement.qualify("m7b"), 0.050)
+    prof.record("verify", placement.qualify("m7b"), 0.055, block=5)
+    sched = ModelChainScheduler(
+        ["m68", "m7b"], "m7b", prof, SimilarityStore(),
+        {"m68": 1.0, "m7b": 100.0}, qualify=placement.qualify)
+    cost, _ = sched.predict_costs(("m68", "m7b"), 4)
+    # the qualified EMAs (2 ms draft, 55 ms verify) were read, not the
+    # cold defaults
+    assert abs(cost - (4 * 0.002 + 0.055)) < 1e-6
+    # an UNQUALIFIED scheduler over the same profiler sees no evidence
+    cold = ModelChainScheduler(
+        ["m68", "m7b"], "m7b", prof, SimilarityStore(),
+        {"m68": 1.0, "m7b": 100.0})
+    cold_cost, _ = cold.predict_costs(("m68", "m7b"), 4)
+    assert cold_cost != cost
+
+
+def test_router_profiler_keys_qualified_on_placed_pool():
+    """Driving a real generate on a 1x1-placed pool records EMAs under
+    the qualified keys (and NOT the bare model names)."""
+    pool = build_pool("1x1")
+    r = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                    fixed_chain=("m68", "m7b"), fixed_window=3,
+                    fused=False)
+    prompt = np.array(jax.random.randint(jax.random.PRNGKey(0),
+                                         (2, 5), 0, 61))
+    r.generate(prompt, np.array([5, 4]), 6, request_id="q")
+    models = {k[1] for k in r.profiler.emas}
+    assert "m68@replicated:1x1" in models
+    assert "m68" not in models
+
+
+# ---------------------------------------------------------------------------
+# Serving engine knob
+# ---------------------------------------------------------------------------
+def test_engine_mesh_knob_places_pool():
+    from repro.serving import ServingEngine
+
+    pool = build_pool()
+    eng = ServingEngine(pool, "m7b", mesh="1x1")
+    assert pool.placement.describe() == "1x1"
+    assert pool.placement.kind("m7b") == "tensor"
+    # a second engine over the SAME placed pool with the same spec is
+    # fine (the example's A/B arms); a MISMATCHED placement is an error
+    ServingEngine(pool, "m7b", mesh="1x1")
+    with pytest.raises(ValueError):
+        ServingEngine(pool, "m7b", mesh=Placement.single())
+    del eng
+
+
+# ---------------------------------------------------------------------------
+# 1x1 anchor: full placement path, bit-identical output
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_mesh_1x1_paged_tree_session_bit_exact():
+    """Paged session + tree chain on a 1x1-placed pool: admit, cycle,
+    retire, readmit — committed streams bit-equal to the unmeshed pool
+    (covers sharded prefill/insert/retire, paged rollback, and tree
+    resolve on the placement path)."""
+    outs = {}
+    for mesh in (None, "1x1"):
+        pool = build_pool(mesh)
+        r = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                        fixed_chain=("m68", "m7b"), fixed_tree="2x1x1",
+                        fused=False, paged=True)
+        prompt = np.array(jax.random.randint(jax.random.PRNGKey(0),
+                                             (3, 7), 0, 61))
+        plens = np.array([7, 5, 6])
+        sess = r.start_session(2, 96, session_id="s")
+        sess.admit(0, prompt[0, :plens[0]], 10)
+        sess.admit(1, prompt[1, :plens[1]], 10)
+        while sess.active.any():
+            sess.run_cycle()
+        a, b = sess.retire(0), sess.retire(1)
+        sess.admit(0, prompt[2, :plens[2]], 10)
+        while sess.active.any():
+            sess.run_cycle()
+        c = sess.retire(0)
+        sess.close()
+        outs[mesh] = (a, b, c)
+    for x, y in zip(outs[None], outs["1x1"]):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# 8-virtual-device suite
+# ---------------------------------------------------------------------------
+@pytest.mark.mesh
+@mesh8
+def test_mesh_2x4_state_is_sharded():
+    """ensure_loaded on a 2x4 pool actually commits NamedShardings: the
+    tensor-parallel target's params land on the mesh, and the executor
+    allocates session state under the placement."""
+    from jax.sharding import NamedSharding
+
+    pool = build_pool("2x4", lazy=True)   # lazy: unload can GC + discharge
+    e = pool.ensure_loaded("m7b")
+    assert e.placed and e.sharding is not None
+    leaves = jax.tree.leaves(e.params)
+    assert all(isinstance(x.sharding, NamedSharding) for x in leaves)
+    specs = {tuple(x.sharding.spec) for x in leaves}
+    assert any(any(ax is not None for ax in s) for s in specs), \
+        "tensor placement produced only replicated leaves"
+    assert pool.placement.total_usage() > 0
+    pool.unload("m7b")
+    assert pool.placement.total_usage() == 0
+
+
+@pytest.mark.mesh
+@mesh8
+def test_mesh_2x4_session_lifecycle():
+    """Sharded serving end to end on the 2x4 mesh: prefill/insert via a
+    paged session, retire + readmit, paged rollback under speculation —
+    greedy tokens equal the unmeshed pool's."""
+    outs = {}
+    for mesh in (None, "2x4"):
+        pool = build_pool(mesh)
+        r = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                        fixed_chain=("m68", "m7b"), fixed_window=3,
+                        fused=False, paged=True)
+        prompt = np.array(jax.random.randint(jax.random.PRNGKey(0),
+                                             (3, 7), 0, 61))
+        plens = np.array([7, 5, 6])
+        sess = r.start_session(2, 96, session_id="s8")
+        sess.admit(0, prompt[0, :plens[0]], 8)
+        sess.admit(1, prompt[1, :plens[1]], 8)
+        while sess.active.any():
+            sess.run_cycle()
+        a, b = sess.retire(0), sess.retire(1)
+        sess.admit(0, prompt[2, :plens[2]], 8)
+        while sess.active.any():
+            sess.run_cycle()
+        c = sess.retire(0)
+        sess.close()
+        outs[mesh] = (a, b, c)
+    for x, y in zip(outs[None], outs["2x4"]):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.mesh
+@mesh8
+def test_mesh_2x4_tree_resolve():
+    """Token-tree speculation (draft_topk expansion, tree verify, tree
+    resolve/rollback) on the 2x4 mesh matches the unmeshed stream."""
+    outs = {}
+    for mesh in (None, "2x4"):
+        pool = build_pool(mesh)
+        r = ChainRouter(pool, "m7b", greedy=True, adaptive=False,
+                        fixed_chain=("m68", "m7b"), fixed_tree="2x1x1",
+                        fused=False)
+        prompt = np.array(jax.random.randint(jax.random.PRNGKey(2),
+                                             (2, 6), 0, 61))
+        out = r.generate(prompt, np.array([6, 5]), 10, request_id="t8")
+        outs[mesh] = out.generated
+    for b in range(2):
+        np.testing.assert_array_equal(outs[None][b], outs["2x4"][b])
+
+
+@pytest.mark.mesh
+@mesh8
+def test_mesh_2x4_memory_accounting():
+    """The load/unload-to-zero invariant on a REAL multi-device mesh,
+    where tensor leaves charge shard-sized bytes to every device."""
+    pool = build_pool("2x4", lazy=True)
+    pl = pool.placement
+    for _ in range(2):
+        pool.ensure_loaded("m68")
+        pool.ensure_loaded("m7b")
+        devs = {d for d in pl.usage}
+        assert len(devs) == 8            # charged across the whole mesh
+        pool.unload("m68")
+        pool.unload("m7b")
+        assert pl.total_usage() == 0
+        assert all(v == 0 for v in pl.usage.values())
+
+
+# ---------------------------------------------------------------------------
+# speclint conformance on placed pools (satellite: placement-aware tiers)
+# ---------------------------------------------------------------------------
+@pytest.mark.mesh
+@pytest.mark.parametrize("mesh", ["1x1",
+                                  pytest.param("2x4", marks=mesh8)])
+def test_speclint_dynamic_tiers_green_on_mesh(mesh):
+    """The jaxpr/HLO tiers must pass on PLACED pools: no unexplained
+    collectives on the 1x1 mesh, collectives tolerated (expected) on the
+    2x4 mesh, and the one-host-transfer-per-cycle runtime contract
+    enforced on both."""
+    from repro.analysis import harness, hlo_rules, jaxpr_rules
+
+    cap = harness.capture_fused_linear(mesh=mesh)
+    assert cap.placement is not None
+    assert cap.placement.describe() == mesh
+    findings = jaxpr_rules.run(cap) + hlo_rules.run(cap)
+    assert not findings, [f.format() for f in findings]
